@@ -1,0 +1,55 @@
+"""Kernel-level benchmark: batch-reduce GEMM vs batched GEMM vs looped
+GEMMs (the paper's Section 2 claim at the kernel interface).
+
+The XLA path is timed (CPU); the Pallas kernel is the TPU target and is
+held to allclose-parity with this exact computation in tests/.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels.brgemm import ref as R
+
+CASES = [
+    # (batch, m, k, n)  — reduce-heavy shapes like conv/LSTM inner loops
+    (16, 64, 64, 64),
+    (32, 128, 128, 128),
+    (64, 64, 256, 64),
+]
+
+
+def looped(a, b):
+    out = jnp.zeros((a.shape[1], b.shape[2]), jnp.float32)
+    for i in range(a.shape[0]):
+        out = out + a[i] @ b[i]       # C stored/reloaded every step
+    return out
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for (nb, m, k, n) in CASES:
+        a = jnp.asarray(rng.normal(size=(nb, m, k)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(nb, k, n)), jnp.float32)
+        fl = 2 * nb * m * k * n
+
+        br = jax.jit(lambda a, b: R.brgemm_ref(a, b))
+        us = timeit(br, a, b)
+        emit(f"sec2_brgemm_{nb}x{m}x{k}x{n}", us,
+             f"{fl / us / 1e3:.1f}GFLOPs")
+
+        bg = jax.jit(lambda a, b: R.batched_matmul_ref(a, b).sum(0))
+        us = timeit(bg, a, b)
+        emit(f"sec2_batchedgemm_{nb}x{m}x{k}x{n}", us,
+             f"{fl / us / 1e3:.1f}GFLOPs")
+
+        lp = jax.jit(looped)
+        us = timeit(lp, a, b)
+        emit(f"sec2_loopedgemm_{nb}x{m}x{k}x{n}", us,
+             f"{fl / us / 1e3:.1f}GFLOPs")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Paper Figures 7/8 (+ Table 2): ResNet-50 convolution layers, forward /
+backward-data / weight-update via the batch-reduce building block.
+
+CPU-scale minibatch (paper uses N=28 on 28 cores; we use N=2 on 1 core)
+and reports per-layer GFLOP/s plus the weighted-efficiency aggregate the
+paper defines in Sec. 4.1.2.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESNET50_LAYERS, conv_flops, emit, timeit
+from repro.kernels.conv2d import conv2d
+
+N = 2
+# layer -> occurrences in the full 53-conv topology (paper Sec. 4.1.2)
+REPEATS = {1: 1, 2: 1, 3: 3, 4: 3, 5: 3, 6: 1, 7: 1, 8: 4, 9: 4, 10: 4,
+           11: 1, 12: 1, 13: 6, 14: 6, 15: 6, 16: 1, 17: 1, 18: 3, 19: 3,
+           20: 3}
+
+
+def run():
+    rng = np.random.default_rng(0)
+    weighted_fl, weighted_t = 0.0, 0.0
+    for (lid, c, k, h, w_, r, s, st) in RESNET50_LAYERS:
+        x = jnp.asarray(rng.normal(size=(N, h, w_, c)), jnp.float32)
+        wt = jnp.asarray(rng.normal(size=(r, s, c, k)) * 0.05, jnp.float32)
+        pad = r // 2
+        fl = conv_flops(N, c, k, h, w_, r, s, st)
+
+        fwd = jax.jit(lambda x, w: conv2d(x, w, stride=st, padding=pad,
+                                          backend="xla"))
+        us = timeit(fwd, x, wt, iters=3)
+        emit(f"fig7_rn50_fwd_layer{lid}", us, f"{fl / us / 1e3:.1f}GFLOPs")
+        weighted_fl += REPEATS[lid] * fl
+        weighted_t += REPEATS[lid] * us
+
+        bwd = jax.jit(jax.grad(
+            lambda x, w: (conv2d(x, w, stride=st, padding=pad,
+                                 backend="xla") ** 2).sum(), argnums=(0, 1)))
+        us_b = timeit(bwd, x, wt, iters=3)
+        emit(f"fig8_rn50_bwdupd_layer{lid}", us_b,
+             f"{2 * fl / us_b / 1e3:.1f}GFLOPs")
+
+    emit("fig7_rn50_fwd_weighted", weighted_t,
+         f"{weighted_fl / weighted_t / 1e3:.1f}GFLOPs_weighted")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,88 @@
+"""Paper Figure 1: convolution implementation strategies.
+
+Compares (on a representative subset of ResNet-50 layers, minibatch 1):
+  * im2col + large GEMM         (paper's yellow line, strategy (i)),
+  * batched GEMM, one GEMM per (r, s) with separate accumulation
+    (paper's green line — no output-register reuse),
+  * batch-reduce formulation: single accumulation chain over (r, s, c_b)
+    (the paper's contribution; XLA path of our kernel on CPU — the Pallas
+    kernel itself targets TPU and is validated by allclose in tests).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import RESNET50_LAYERS, conv_flops, emit, timeit
+
+SUBSET = (2, 4, 8, 13, 18)
+
+
+def im2col_conv(x, w, stride):
+    r, s, c, k = w.shape
+    n, h, wi, _ = x.shape
+    pad = r // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    p = (h + 2 * pad - r) // stride + 1
+    q = (wi + 2 * pad - s) // stride + 1
+    cols = []
+    for i in range(r):
+        for j in range(s):
+            cols.append(jax.lax.slice(
+                xp, (0, i, j, 0),
+                (n, i + (p - 1) * stride + 1, j + (q - 1) * stride + 1, c),
+                (1, stride, stride, 1)))
+    col = jnp.concatenate(cols, axis=-1).reshape(n * p * q, r * s * c)
+    return (col @ w.transpose(0, 1, 2, 3).reshape(r * s * c, k)).reshape(
+        n, p, q, k)
+
+
+def batched_gemm_conv(x, w, stride):
+    """One GEMM per (r, s); outputs accumulated *after* each GEMM —
+    the strided-batch-gemm baseline without the reduce."""
+    r, s, c, k = w.shape
+    n, h, wi, _ = x.shape
+    pad = r // 2
+    xp = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    p = (h + 2 * pad - r) // stride + 1
+    q = (wi + 2 * pad - s) // stride + 1
+    out = jnp.zeros((n * p * q, k), jnp.float32)
+    for i in range(r):
+        for j in range(s):
+            xs = jax.lax.slice(
+                xp, (0, i, j, 0),
+                (n, i + (p - 1) * stride + 1, j + (q - 1) * stride + 1, c),
+                (1, stride, stride, 1)).reshape(n * p * q, c)
+            out = out + xs @ w[i, j]          # separate store/load of C
+    return out.reshape(n, p, q, k)
+
+
+def brgemm_conv(x, w, stride):
+    """Batch-reduce formulation: XLA fuses the (r, s) chain into one
+    accumulation (this is what lax.conv lowers to for direct conv)."""
+    r = w.shape[0]
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), ((r // 2, r // 2), (r // 2, r // 2)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for (lid, c, k, h, w_, r, s, st) in RESNET50_LAYERS:
+        if lid not in SUBSET:
+            continue
+        x = jnp.asarray(rng.normal(size=(1, h, w_, c)), jnp.float32)
+        wt = jnp.asarray(rng.normal(size=(r, s, c, k)) * 0.1, jnp.float32)
+        fl = conv_flops(1, c, k, h, w_, r, s, st)
+        for name, fn in (("im2col", im2col_conv),
+                         ("batched_gemm", batched_gemm_conv),
+                         ("brgemm", brgemm_conv)):
+            f = jax.jit(lambda x, w, fn=fn: fn(x, w, st))
+            us = timeit(f, x, wt, iters=5)
+            emit(f"fig1_conv_layer{lid}_{name}", us,
+                 f"{fl / us / 1e3:.1f}GFLOPs")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Figure 9: fully-connected layers FWD / BWD / UPD.
+
+Paper shapes: N=1344 minibatch, C=K in {256, 512, 1024}; scaled minibatch
+for the CPU budget.  All three passes route through the batch-reduce GEMM
+(BWD reduces over K, UPD reduces over the minibatch — paper Sec. 4.1.3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.layers import linear
+
+N = 256
+SIZES = (256, 512, 1024)
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for ck in SIZES:
+        p = linear.init(jax.random.PRNGKey(0), ck, ck)
+        x = jnp.asarray(rng.normal(size=(N, ck)), jnp.float32)
+        fl = 2 * N * ck * ck
+
+        fwd = jax.jit(lambda p, x: linear.apply(p, x, activation="relu",
+                                                backend="xla"))
+        us = timeit(fwd, p, x)
+        emit(f"fig9_fc_fwd_{ck}", us, f"{fl / us / 1e3:.1f}GFLOPs")
+
+        bwd = jax.jit(jax.grad(
+            lambda p, x: (linear.apply(p, x, activation="relu",
+                                       backend="xla") ** 2).sum(),
+            argnums=(0, 1)))
+        us = timeit(bwd, p, x)
+        emit(f"fig9_fc_bwdupd_{ck}", us, f"{2 * fl / us / 1e3:.1f}GFLOPs")
+
+
+if __name__ == "__main__":
+    run()

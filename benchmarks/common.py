@@ -1,0 +1,56 @@
+"""Benchmark helpers: timing, CSV output, ResNet-50 layer table (paper
+Table 2)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def timeit(fn, *args, iters: int = 5, warmup: int = 2):
+    """Median wall time per call in microseconds (jit-compiled fn)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+# Paper Table 2: ResNet-50 convolution layer specifications.
+RESNET50_LAYERS = [
+    # id, C, K, H, W, R, S, stride
+    (1, 3, 64, 224, 224, 7, 7, 2),
+    (2, 64, 256, 56, 56, 1, 1, 1),
+    (3, 64, 64, 56, 56, 1, 1, 1),
+    (4, 64, 64, 56, 56, 3, 3, 1),
+    (5, 256, 64, 56, 56, 1, 1, 1),
+    (6, 256, 512, 56, 56, 1, 1, 2),
+    (7, 256, 128, 56, 56, 1, 1, 2),
+    (8, 128, 128, 28, 28, 3, 3, 1),
+    (9, 128, 512, 28, 28, 1, 1, 1),
+    (10, 512, 128, 28, 28, 1, 1, 1),
+    (11, 512, 1024, 28, 28, 1, 1, 2),
+    (12, 512, 256, 28, 28, 1, 1, 2),
+    (13, 256, 256, 14, 14, 3, 3, 1),
+    (14, 256, 1024, 14, 14, 1, 1, 1),
+    (15, 1024, 256, 14, 14, 1, 1, 1),
+    (16, 1024, 2048, 14, 14, 1, 1, 2),
+    (17, 1024, 512, 14, 14, 1, 1, 2),
+    (18, 512, 512, 7, 7, 3, 3, 1),
+    (19, 512, 2048, 7, 7, 1, 1, 1),
+    (20, 2048, 512, 7, 7, 1, 1, 1),
+]
+
+
+def conv_flops(n, c, k, h, w, r, s, stride):
+    p = (h + 2 * (r // 2) - r) // stride + 1
+    q = (w + 2 * (s // 2) - s) // stride + 1
+    return 2 * n * k * p * q * c * r * s

@@ -1,0 +1,36 @@
+"""Benchmark harness — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Mapping to the paper:
+  fig1_*   Figure 1  convolution implementation strategies
+  sec2_*   Section 2 batch-reduce vs batched vs looped GEMM
+  fig6_*   Figure 6  LSTM cell fwd / bwd+upd
+  fig7/8_* Figures 7-8 + Table 2: ResNet-50 convolutions
+  fig9_*   Figure 9  fully-connected layers
+  fig10_*  Figure 10 distributed-scaling proxy (collective footprint)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_brgemm, bench_conv_resnet50,
+                            bench_conv_strategies, bench_distributed_proxy,
+                            bench_fc, bench_lstm)
+    print("name,us_per_call,derived")
+    ok = True
+    for mod in (bench_brgemm, bench_conv_strategies, bench_lstm,
+                bench_fc, bench_conv_resnet50, bench_distributed_proxy):
+        try:
+            mod.run()
+        except Exception:
+            ok = False
+            print(f"# ERROR in {mod.__name__}", file=sys.stderr)
+            traceback.print_exc()
+    if not ok:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

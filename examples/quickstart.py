@@ -1,0 +1,36 @@
+"""Quickstart: train a reduced smollm-135m for a few steps on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the public API path a user takes: pick an assigned arch
+config, reduce it, build the mesh/shardings, stream synthetic data, train
+with AdamW + checkpointing, then resume.
+"""
+import pathlib
+import sys
+import tempfile
+
+sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "src"))
+
+from repro import configs                                    # noqa: E402
+from repro.configs.shapes import ShapeCfg                    # noqa: E402
+from repro.launch.mesh import make_mesh                      # noqa: E402
+from repro.launch.train import run                           # noqa: E402
+
+
+def main():
+    cfg = configs.get("smollm-135m").reduced()
+    shape = ShapeCfg("quickstart", "train", seq_len=64, global_batch=8)
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        _, losses = run(cfg, shape, mesh=mesh, steps=10, ckpt_dir=ckpt_dir,
+                        save_every=5, log_every=2)
+        print(f"\ntrained 10 steps: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+        # resume from the step-5 checkpoint and continue to 14
+        _, losses2 = run(cfg, shape, mesh=mesh, steps=14, ckpt_dir=ckpt_dir,
+                         log_every=2)
+        print(f"resumed and continued: final loss {losses2[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

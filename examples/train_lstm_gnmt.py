@@ -1,0 +1,57 @@
+"""Paper workload (Sec. 4.2.1): GNMT-style 4-layer LSTM LM training.
+
+    PYTHONPATH=src python examples/train_lstm_gnmt.py
+
+Every GEMM in the LSTM cells is the batch-reduce building block (Alg 2);
+this is the end-to-end driver form of the paper's distributed GNMT run,
+scaled to CPU (the paper trains to BLEU 22.7 on WMT16; here we verify the
+loss decreases on a synthetic copy task).
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "src"))
+
+import jax                                                    # noqa: E402
+import jax.numpy as jnp                                       # noqa: E402
+import numpy as np                                            # noqa: E402
+
+from repro.models import lstm_lm                              # noqa: E402
+from repro.train import optimizer as opt                      # noqa: E402
+
+
+def main():
+    cfg = lstm_lm.LSTMLMCfg(vocab=128, d_model=64, n_layers=4)
+    params = lstm_lm.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = opt.SGDMCfg(lr=0.3, momentum=0.9, grad_clip=1.0)
+    state = opt.sgdm_init(params, ocfg)
+
+    rng = np.random.default_rng(0)
+
+    def make_batch():
+        # learnable structure: next token = current token + 1 (mod vocab)
+        start = rng.integers(0, cfg.vocab, size=(16, 1))
+        seq = (start + np.arange(33)) % cfg.vocab
+        return {"tokens": jnp.asarray(seq[:, :-1], jnp.int32),
+                "labels": jnp.asarray(seq[:, 1:], jnp.int32)}
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lstm_lm.loss_fn, has_aux=True)(params, batch, cfg)
+        params, state, _ = opt.sgdm_update(params, grads, state, ocfg)
+        return params, state, loss
+
+    losses = []
+    for i in range(60):
+        params, state, loss = step(params, state, make_batch())
+        losses.append(float(loss))
+        if i % 10 == 0:
+            print(f"step {i:3d} loss {losses[-1]:.4f}")
+    print(f"\nloss {losses[0]:.3f} -> {losses[-1]:.3f} "
+          f"({'LEARNED' if losses[-1] < losses[0] * 0.7 else 'no progress'})")
+    assert losses[-1] < losses[0] * 0.7
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: batch-reduce GEMM as the single DL building block, on TPU/JAX."""
+__version__ = "1.0.0"

@@ -1,0 +1,107 @@
+"""Fault-tolerant checkpointing: atomic, async, keep-k, mesh-elastic.
+
+Layout:  <dir>/step_<n>/shard_<host>.npz + MANIFEST.json, committed by
+atomic rename of a temp directory (a crash mid-write never corrupts the
+latest checkpoint).  ``save_async`` snapshots to host memory synchronously
+(so training can donate buffers) and writes on a background thread.
+
+Restore is *mesh-elastic*: arrays are saved unsharded (gathered per leaf)
+and restored under any new mesh/sharding — the elastic-rescale path for
+node-failure recovery (tested in tests/test_checkpoint.py).
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out[key] = np.asarray(leaf)
+    return out, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory, *, keep: int = 3):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def _step_dir(self, step: int) -> pathlib.Path:
+        return self.dir / f"step_{step:08d}"
+
+    def save(self, step: int, tree) -> None:
+        flat, _ = _flatten(tree)
+        tmp = self.dir / f".tmp_step_{step:08d}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        np.savez(tmp / "shard_0.npz", **flat)
+        (tmp / "MANIFEST.json").write_text(json.dumps({
+            "step": step, "n_arrays": len(flat),
+            "keys": sorted(flat)}))
+        final = self._step_dir(step)
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)          # atomic commit
+        self._gc()
+
+    def save_async(self, step: int, tree) -> None:
+        """Snapshot to host RAM now; write in the background."""
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # sync device->host copy
+        self._thread = threading.Thread(
+            target=self.save, args=(step, host_tree), daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.dir.glob("step_*"))
+        return steps[-1] if steps else None
+
+    def restore(self, like_tree, step: int | None = None, *,
+                shardings=None):
+        """Restore into the structure of ``like_tree``; optionally place
+        each leaf with the given shardings (elastic re-mesh)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        data = np.load(self._step_dir(step) / "shard_0.npz")
+        flat_like, treedef = _flatten(like_tree)
+        leaves = []
+        for key in flat_like:
+            arr = data[key]
+            leaves.append(arr)
+        restored = jax.tree_util.tree_unflatten(
+            treedef, [data[k] for k in flat_like])
+        if shardings is not None:
+            restored = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), restored, shardings)
+        else:
+            restored = jax.tree.map(
+                lambda x, l: jax.numpy.asarray(x, l.dtype), restored,
+                like_tree)
+        return restored, step
+
+    def _gc(self) -> None:
+        steps = sorted(int(p.name.split("_")[1])
+                       for p in self.dir.glob("step_*"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)

@@ -1,0 +1,29 @@
+"""Registry of assigned architectures (``--arch <id>``)."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ArchCfg  # noqa: F401
+from repro.configs.shapes import SHAPES, ShapeCfg, applicable  # noqa: F401
+
+_MODULES = {
+    "llava-next-34b": "llava_next_34b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "grok-1-314b": "grok_1_314b",
+    "starcoder2-15b": "starcoder2_15b",
+    "smollm-135m": "smollm_135m",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "mistral-large-123b": "mistral_large_123b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+}
+
+ARCH_NAMES = tuple(_MODULES)
+
+
+def get(name: str) -> ArchCfg:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG

@@ -1,0 +1,1 @@
+"""Core: the batch-reduce GEMM public API, blocking heuristics, epilogues."""

@@ -1,0 +1,80 @@
+"""Blocking-factor heuristics for the batch-reduce GEMM kernel on TPU.
+
+The paper picks (m_b, n_b) so the accumulator block lives in registers and
+the A/B panels stream from cache (Sec. 2, Fig. 2b).  On TPU the constraints
+become:
+
+  * lane dimension (last axis) must be a multiple of 128,
+  * sublane dimension (second-minor) a multiple of 8 (fp32) / 16 (bf16) /
+    32 (int8) for efficient VREG tiling,
+  * MXU is a 128x128 systolic array -> contraction and output dims want to
+    be multiples of 128,
+  * the working set (A panel + B panel, double-buffered, + fp32 accumulator)
+    must fit the ~16 MiB/core VMEM.
+"""
+from __future__ import annotations
+
+import dataclasses
+import jax.numpy as jnp
+
+LANE = 128
+VMEM_BYTES = 16 * 1024 * 1024
+# Leave headroom for Mosaic spills / semaphores / the output buffer.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+
+def sublane(dtype) -> int:
+    itemsize = jnp.dtype(dtype).itemsize
+    return {4: 8, 2: 16, 1: 32}.get(itemsize, 8)
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@dataclasses.dataclass(frozen=True)
+class Blocks:
+    bm: int
+    bn: int
+    bk: int
+
+    def astuple(self):
+        return (self.bm, self.bn, self.bk)
+
+
+def choose_blocks(
+    m: int,
+    n: int,
+    k: int,
+    dtype=jnp.float32,
+    *,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    prefer_bm: int = 128,
+    prefer_bn: int = 128,
+    prefer_bk: int = 512,
+) -> Blocks:
+    """Pick (bm, bn, bk) for a (m x k) @ (k x n) batch-reduce GEMM.
+
+    Small dims are rounded up to the hardware tile (the wrapper pads), large
+    dims get the preferred MXU-friendly block, and bk is shrunk until the
+    double-buffered working set fits the VMEM budget.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    sub = sublane(dtype)
+
+    bm = min(round_up(m, sub), prefer_bm)
+    bm = round_up(bm, sub)
+    bn = min(round_up(n, LANE), prefer_bn)
+    bk = min(round_up(k, LANE), prefer_bk)
+
+    def working_set(bm, bn, bk):
+        panels = (bm * bk + bk * bn) * itemsize * 2  # double buffered
+        acc = bm * bn * 4  # fp32 accumulator in VMEM scratch
+        out = bm * bn * itemsize * 2
+        return panels + acc + out
+
+    while working_set(bm, bn, bk) > vmem_budget and bk > LANE:
+        bk = max(LANE, bk // 2)
+    while working_set(bm, bn, bk) > vmem_budget and bm > sub:
+        bm = max(sub, bm // 2)
+    return Blocks(bm=bm, bn=bn, bk=bk)

@@ -1,0 +1,15 @@
+"""Core public API: the batch-reduce GEMM as the single building block.
+
+Every matmul in this framework routes through this module — layers never
+call ``jnp.dot`` directly for their compute hot-spots.  See
+``repro.kernels.brgemm`` for the Pallas kernel, the XLA-path reference, and
+the backend-dispatch rules.
+"""
+from repro.kernels.brgemm import (  # noqa: F401
+    batched_matmul,
+    brgemm,
+    matmul,
+    resolve_backend,
+    set_default_backend,
+)
+from repro.core.blocking import Blocks, choose_blocks  # noqa: F401

@@ -1,0 +1,81 @@
+"""Epilogue fusion registry for the batch-reduce GEMM kernel.
+
+The paper's key fusion claim (Sec. 3.1.2, 3.3.2): element-wise operators are
+applied on the just-computed output block *while it is hot in cache*.  On TPU
+the analogue is applying the epilogue on the fp32 VMEM accumulator inside the
+Pallas kernel, before the single write-back to HBM.
+
+Every epilogue is defined in fp32 and must be usable both inside a Pallas
+kernel body and in the pure-jnp reference path so the two stay bit-comparable.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def _gelu_tanh(x):
+    # tanh approximation (matches jax.nn.gelu(approximate=True))
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": lambda x: jnp.maximum(x, 0.0),
+    "sigmoid": jax.nn.sigmoid,
+    "tanh": jnp.tanh,
+    "gelu": _gelu_tanh,
+    "silu": lambda x: x * jax.nn.sigmoid(x),
+    "exp": jnp.exp,
+    "square": lambda x: x * x,
+}
+
+# Activation gradients expressible from the *output* y = act(pre).  These let
+# the custom VJP avoid storing (or recomputing) the pre-activation.
+GRAD_FROM_OUTPUT = {
+    "none": lambda y: jnp.ones_like(y),
+    "relu": lambda y: (y > 0).astype(y.dtype),
+    "sigmoid": lambda y: y * (1.0 - y),
+    "tanh": lambda y: 1.0 - y * y,
+    "exp": lambda y: y,
+}
+
+
+def _gelu_grad_pre(pre):
+    c = jnp.sqrt(2.0 / jnp.pi).astype(pre.dtype)
+    inner = c * (pre + 0.044715 * pre**3)
+    t = jnp.tanh(inner)
+    sech2 = 1.0 - t * t
+    return 0.5 * (1.0 + t) + 0.5 * pre * sech2 * c * (1.0 + 3 * 0.044715 * pre * pre)
+
+
+def _silu_grad_pre(pre):
+    s = jax.nn.sigmoid(pre)
+    return s * (1.0 + pre * (1.0 - s))
+
+
+# Gradients that need the pre-activation (recompute-based VJP path).
+GRAD_FROM_PREACT = {
+    "gelu": _gelu_grad_pre,
+    "silu": _silu_grad_pre,
+    "square": lambda pre: 2.0 * pre,
+}
+
+
+def needs_preact(activation: str) -> bool:
+    """True if the activation gradient cannot be derived from the output."""
+    if activation in GRAD_FROM_OUTPUT:
+        return False
+    if activation in GRAD_FROM_PREACT:
+        return True
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def apply(activation: str, x):
+    try:
+        return ACTIVATIONS[activation](x)
+    except KeyError:
+        raise ValueError(
+            f"unknown activation {activation!r}; known: {sorted(ACTIVATIONS)}"
+        ) from None

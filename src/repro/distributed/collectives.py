@@ -1,0 +1,53 @@
+"""Distributed-optimization helpers: gradient compression with error
+feedback, and collective utilities.
+
+Under pjit, gradients are already reduce-scattered by XLA; compressing the
+fp32 gradient tree to int8 (per-tensor absmax scaling) before the optimizer
+models the wire-format compression used at 1000+-node scale.  Error feedback
+(residual carried in the caller's state) keeps convergence — exposed here as
+pure functions so the train step can thread the residual.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_grads(grads, *, kind: str = "int8"):
+    """Returns (compressed_tree, scales_tree)."""
+    if kind == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.bfloat16), grads), None
+    if kind == "int8":
+        def enc(g):
+            g32 = g.astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-30) / 127.0
+            q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+            return q, scale
+        flat, treedef = jax.tree.flatten(grads)
+        enc_out = [enc(g) for g in flat]
+        q = jax.tree.unflatten(treedef, [e[0] for e in enc_out])
+        s = jax.tree.unflatten(treedef, [e[1] for e in enc_out])
+        return q, s
+    raise ValueError(kind)
+
+
+def decompress_grads(grads, scales, *, kind: str = "int8"):
+    if kind == "bf16":
+        return jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    if kind == "int8":
+        return jax.tree.map(
+            lambda q, s: q.astype(jnp.float32) * s, grads, scales)
+    raise ValueError(kind)
+
+
+def compress_with_error_feedback(grads, residual, *, kind: str = "int8"):
+    """Error-feedback compression: q = C(g + r); r' = (g + r) - q."""
+    if residual is None:
+        residual = jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32),
+                                grads)
+    biased = jax.tree.map(
+        lambda g, r: g.astype(jnp.float32) + r, grads, residual)
+    q, s = compress_grads(biased, kind=kind)
+    deq = decompress_grads(q, s, kind=kind)
+    new_residual = jax.tree.map(jnp.subtract, biased, deq)
+    return deq, new_residual

@@ -1,0 +1,4 @@
+"""Pallas TPU kernels: batch-reduce GEMM (the paper's building block),
+direct convolution, and flash attention — each with kernel.py (pl.pallas_call
++ BlockSpec), ops.py (jit'd wrapper + custom VJP + backend dispatch), and
+ref.py (pure-jnp oracle)."""

@@ -1,0 +1,7 @@
+from repro.kernels.brgemm.ops import (  # noqa: F401
+    batched_matmul,
+    brgemm,
+    matmul,
+    resolve_backend,
+    set_default_backend,
+)

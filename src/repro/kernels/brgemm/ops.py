@@ -1,0 +1,234 @@
+"""Public, differentiable entry points for the batch-reduce GEMM kernel.
+
+Backend dispatch:
+  * ``pallas``  — the Pallas TPU kernel (kernel.py). On CPU it runs in
+    interpret mode (Python evaluation of the kernel body) for correctness
+    validation; on TPU it compiles via Mosaic.
+  * ``xla``     — the pure-jnp reference (ref.py). Bit-comparable numerics
+    (fp32 accumulation, identical epilogues). This path is used for the
+    512-device dry-run and CPU-scale smoke tests, where interpreting a
+    Python kernel under a production mesh is meaningless.
+
+The custom VJP expresses the backward passes through the *same* building
+block, mirroring the paper's claim that fwd/bwd/upd all reduce to
+batch-reduce GEMM calls:
+    dX = dPre @ W^T        (brgemm over K-blocks)
+    dW = X^T @ dPre        (brgemm: reduction dim = minibatch, cf. paper 4.1.1 "upd")
+"""
+from __future__ import annotations
+
+import functools
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fusion
+from repro.core.blocking import Blocks
+from repro.kernels.brgemm import kernel as K
+from repro.kernels.brgemm import ref as R
+
+_BACKEND_OVERRIDE: str | None = None
+
+
+def set_default_backend(name: str | None) -> None:
+    global _BACKEND_OVERRIDE
+    assert name in (None, "xla", "pallas"), name
+    _BACKEND_OVERRIDE = name
+
+
+def resolve_backend(backend: str | None = None) -> str:
+    if backend is not None:
+        return backend
+    if _BACKEND_OVERRIDE is not None:
+        return _BACKEND_OVERRIDE
+    env = os.environ.get("REPRO_BRGEMM_BACKEND")
+    if env:
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+class _Cfg(NamedTuple):
+    activation: str
+    alpha: float
+    beta: float
+    out_dtype: object
+    blocks: Blocks | None
+    interpret: bool
+
+
+# --------------------------------------------------------------------------
+# matmul: C = act(alpha * X @ W + beta * C0 + bias)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _matmul_p(cfg: _Cfg, x, w, bias, c0):
+    return K.matmul_pallas(
+        x, w, bias, c0,
+        activation=cfg.activation, alpha=cfg.alpha, beta=cfg.beta,
+        out_dtype=cfg.out_dtype, blocks=cfg.blocks, interpret=cfg.interpret,
+    )
+
+
+def _matmul_fwd(cfg, x, w, bias, c0):
+    y = _matmul_p(cfg, x, w, bias, c0)
+    return y, (x, w, bias, c0, y)
+
+
+def _act_bar(cfg, res, dy):
+    """dy * act'(pre) in fp32, recomputing pre only when required."""
+    x, w, bias, c0, y = res
+    dy32 = dy.astype(jnp.float32)
+    if not fusion.needs_preact(cfg.activation):
+        return dy32 * fusion.GRAD_FROM_OUTPUT[cfg.activation](
+            y.astype(jnp.float32))
+    pre = K.matmul_pallas(
+        x, w, bias, c0, activation="none", alpha=cfg.alpha, beta=cfg.beta,
+        out_dtype=jnp.float32, blocks=cfg.blocks, interpret=cfg.interpret)
+    return dy32 * fusion.GRAD_FROM_PREACT[cfg.activation](pre)
+
+
+def _matmul_bwd(cfg, res, dy):
+    x, w, bias, c0, y = res
+    g = _act_bar(cfg, res, dy)  # fp32, (m, n)
+    galpha = (g * jnp.float32(cfg.alpha)).astype(x.dtype)
+    dx = K.matmul_pallas(
+        galpha, w.T, interpret=cfg.interpret).astype(x.dtype)
+    dw = K.matmul_pallas(
+        x.T, galpha, interpret=cfg.interpret).astype(w.dtype)
+    dbias = None
+    if bias is not None:
+        dbias = g.sum(axis=0).astype(bias.dtype)
+    dc0 = None
+    if c0 is not None:
+        dc0 = (g * jnp.float32(cfg.beta)).astype(c0.dtype)
+    return dx, dw, dbias, dc0
+
+
+_matmul_p.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def matmul(
+    x,
+    w,
+    bias=None,
+    c0=None,
+    *,
+    activation: str = "none",
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    out_dtype=None,
+    backend: str | None = None,
+    blocks: Blocks | None = None,
+):
+    """Batch-reduce GEMM over K blocks; x may have any leading dims."""
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    c02 = c0.reshape(-1, c0.shape[-1]) if c0 is not None else None
+    be = resolve_backend(backend)
+    if be == "xla":
+        y = R.matmul_ref(
+            x2, w, bias, activation=activation, alpha=alpha, beta=beta,
+            c0=c02, out_dtype=out_dtype)
+    else:
+        cfg = _Cfg(activation, float(alpha), float(beta), out_dtype, blocks,
+                   _interpret())
+        y = _matmul_p(cfg, x2, w, bias, c02)
+    return y.reshape(*lead, w.shape[-1])
+
+
+# --------------------------------------------------------------------------
+# brgemm (stacked blocks): C = act(alpha * sum_i A_i @ B_i + beta*C0 + bias)
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _brgemm_p(cfg: _Cfg, a, b, bias, c0):
+    return K.brgemm_stacked_pallas(
+        a, b, c0, bias,
+        activation=cfg.activation, alpha=cfg.alpha, beta=cfg.beta,
+        out_dtype=cfg.out_dtype, blocks=cfg.blocks, interpret=cfg.interpret,
+    )
+
+
+def _brgemm_fwd(cfg, a, b, bias, c0):
+    y = _brgemm_p(cfg, a, b, bias, c0)
+    return y, (a, b, bias, c0, y)
+
+
+def _brgemm_bwd(cfg, res, dy):
+    a, b, bias, c0, y = res
+    dy32 = dy.astype(jnp.float32)
+    if not fusion.needs_preact(cfg.activation):
+        g = dy32 * fusion.GRAD_FROM_OUTPUT[cfg.activation](
+            y.astype(jnp.float32))
+    else:
+        pre = K.brgemm_stacked_pallas(
+            a, b, c0, bias, activation="none", alpha=cfg.alpha, beta=cfg.beta,
+            out_dtype=jnp.float32, blocks=cfg.blocks, interpret=cfg.interpret)
+        g = dy32 * fusion.GRAD_FROM_PREACT[cfg.activation](pre)
+    galpha = (g * jnp.float32(cfg.alpha)).astype(a.dtype)
+    # dA_i = g @ B_i^T : batched GEMM with g broadcast (zero-copy index_map)
+    da = K.batched_matmul_pallas(
+        galpha, jnp.swapaxes(b, -1, -2), interpret=cfg.interpret
+    ).astype(a.dtype)
+    # dB_i = A_i^T @ g
+    db = K.batched_matmul_pallas(
+        jnp.swapaxes(a, -1, -2), galpha, interpret=cfg.interpret
+    ).astype(b.dtype)
+    dbias = g.sum(axis=0).astype(bias.dtype) if bias is not None else None
+    dc0 = (g * jnp.float32(cfg.beta)).astype(c0.dtype) if c0 is not None else None
+    return da, db, dbias, dc0
+
+
+_brgemm_p.defvjp(_brgemm_fwd, _brgemm_bwd)
+
+
+def brgemm(
+    a,
+    b,
+    bias=None,
+    c0=None,
+    *,
+    activation: str = "none",
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    out_dtype=None,
+    backend: str | None = None,
+    blocks: Blocks | None = None,
+):
+    """The paper's batch-reduce GEMM. a: (B, m, k), b: (B, k, n) -> (m, n)."""
+    be = resolve_backend(backend)
+    if be == "xla":
+        return R.brgemm_ref(
+            a, b, c0, bias, activation=activation, alpha=alpha, beta=beta,
+            out_dtype=out_dtype)
+    cfg = _Cfg(activation, float(alpha), float(beta), out_dtype, blocks,
+               _interpret())
+    return _brgemm_p(cfg, a, b, bias, c0)
+
+
+def batched_matmul(
+    a,
+    b,
+    bias=None,
+    *,
+    activation: str = "none",
+    alpha: float = 1.0,
+    out_dtype=None,
+    backend: str | None = None,
+    blocks: Blocks | None = None,
+):
+    """Strided-batched GEMM baseline (no cross-batch reduction)."""
+    be = resolve_backend(backend)
+    if be == "xla":
+        return R.batched_matmul_ref(
+            a, b, bias, activation=activation, alpha=alpha,
+            out_dtype=out_dtype)
+    return K.batched_matmul_pallas(
+        a, b, bias, activation=activation, alpha=float(alpha),
+        out_dtype=out_dtype, blocks=blocks, interpret=_interpret())

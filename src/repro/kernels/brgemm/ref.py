@@ -1,0 +1,86 @@
+"""Pure-jnp oracle for the batch-reduce GEMM kernel.
+
+Implements exactly   C = act( alpha * sum_i A_i @ B_i + beta * C0 + bias )
+with fp32 accumulation, mirroring the Pallas kernel's numerics: inputs may be
+bf16/fp32, the reduction and epilogue run in fp32, and the result is cast to
+``out_dtype`` (default: the input dtype).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import fusion
+
+
+def _finish(acc, c0, bias, alpha, beta, activation, out_dtype):
+    acc = acc * jnp.float32(alpha)
+    if c0 is not None and beta != 0.0:
+        acc = acc + jnp.float32(beta) * c0.astype(jnp.float32)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    acc = fusion.apply(activation, acc)
+    return acc.astype(out_dtype)
+
+
+def brgemm_ref(
+    a,
+    b,
+    c0=None,
+    bias=None,
+    *,
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    activation: str = "none",
+    out_dtype=None,
+):
+    """Stacked-blocks batch-reduce GEMM. a: (B, m, k), b: (B, k, n)."""
+    out_dtype = out_dtype or a.dtype
+    acc = jnp.einsum(
+        "imk,ikn->mn", a, b, preferred_element_type=jnp.float32
+    )
+    return _finish(acc, c0, bias, alpha, beta, activation, out_dtype)
+
+
+def matmul_ref(
+    x,
+    w,
+    bias=None,
+    *,
+    activation: str = "none",
+    alpha: float = 1.0,
+    beta: float = 0.0,
+    c0=None,
+    out_dtype=None,
+):
+    """Plain GEMM viewed as a batch-reduce over K blocks. x: (m,k), w: (k,n)."""
+    out_dtype = out_dtype or x.dtype
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return _finish(acc, c0, bias, alpha, beta, activation, out_dtype)
+
+
+def batched_matmul_ref(
+    a,
+    b,
+    bias=None,
+    *,
+    activation: str = "none",
+    alpha: float = 1.0,
+    out_dtype=None,
+):
+    """Strided-batched GEMM (the *baseline* the paper compares against).
+
+    a: (B, m, k) or (m, k) broadcast; b: (B, k, n) or (k, n) broadcast.
+    Returns (B, m, n).  No cross-batch reduction.
+    """
+    out_dtype = out_dtype or a.dtype
+    if a.ndim == 2:
+        acc = jnp.einsum("mk,ikn->imn", a, b, preferred_element_type=jnp.float32)
+    elif b.ndim == 2:
+        acc = jnp.einsum("imk,kn->imn", a, b, preferred_element_type=jnp.float32)
+    else:
+        acc = jnp.einsum("imk,ikn->imn", a, b, preferred_element_type=jnp.float32)
+    acc = acc * jnp.float32(alpha)
+    if bias is not None:
+        acc = acc + bias.astype(jnp.float32)
+    acc = fusion.apply(activation, acc)
+    return acc.astype(out_dtype)

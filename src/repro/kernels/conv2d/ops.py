@@ -1,0 +1,133 @@
+"""Differentiable conv2d with dual-convolution backward — paper Sec. 3.2.2.
+
+The paper (citing [27]) implements backward-by-data and weight-update as
+"dual convolutions": linear index transformations of the forward loop nest,
+reusing the same batch-reduce building block.  Here:
+
+  * dgrad  = conv2d( dilate_{stride}(g), rot180(W) swapped C<->K, stride=1 )
+             — runs through the *same* Pallas conv kernel,
+  * wgrad  = per-(r,s) batch-reduce GEMM  X_(r,s)^T @ g  with the minibatch
+             as the reduction dimension (the paper's "upd" pass, Sec. 4.1.1),
+  * bias   = spatial/minibatch sum of g.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fusion
+from repro.kernels.brgemm import kernel as BK
+from repro.kernels.conv2d import ref as R
+from repro.kernels.conv2d.kernel import conv2d_pallas
+
+
+class _Cfg(NamedTuple):
+    stride: int
+    padding: int
+    activation: str
+    out_dtype: object
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _conv_p(cfg: _Cfg, x, w, bias):
+    return conv2d_pallas(
+        x, w, bias, stride=cfg.stride, padding=cfg.padding,
+        activation=cfg.activation, out_dtype=cfg.out_dtype,
+        interpret=cfg.interpret)
+
+
+def _conv_fwd(cfg, x, w, bias):
+    y = _conv_p(cfg, x, w, bias)
+    return y, (x, w, bias, y)
+
+
+def _dilate(g, stride):
+    if stride == 1:
+        return g
+    n, p, q, k = g.shape
+    out = jnp.zeros((n, (p - 1) * stride + 1, (q - 1) * stride + 1, k),
+                    g.dtype)
+    return out.at[:, ::stride, ::stride, :].set(g)
+
+
+def _conv_bwd(cfg, res, dy):
+    x, w, bias, y = res
+    st, pad = cfg.stride, cfg.padding
+    n, h, wi, c = x.shape
+    r_, s_, _, k = w.shape
+    p = (h + 2 * pad - r_) // st + 1
+    q = (wi + 2 * pad - s_) // st + 1
+
+    dy32 = dy.astype(jnp.float32)
+    if not fusion.needs_preact(cfg.activation):
+        g = dy32 * fusion.GRAD_FROM_OUTPUT[cfg.activation](
+            y.astype(jnp.float32))
+    else:
+        pre = conv2d_pallas(
+            x, w, bias, stride=st, padding=pad, activation="none",
+            out_dtype=jnp.float32, interpret=cfg.interpret)
+        g = dy32 * fusion.GRAD_FROM_PREACT[cfg.activation](pre)
+    g = g.astype(x.dtype)
+
+    # --- dgrad: dual convolution through the same Pallas kernel ----------
+    g_dil = _dilate(g, st)
+    # bottom/right coverage pad so the dual conv reproduces dx of shape H, W
+    extra_h = h - ((p - 1) * st + r_ - 2 * pad)
+    extra_w = wi - ((q - 1) * st + s_ - 2 * pad)
+    g_dil = jnp.pad(g_dil, ((0, 0), (0, extra_h), (0, extra_w), (0, 0)))
+    w_dual = jnp.flip(w, axis=(0, 1)).swapaxes(2, 3)  # (R, S, K, C)
+    dx = conv2d_pallas(
+        g_dil, w_dual, stride=1, padding=r_ - 1 - pad,
+        out_dtype=jnp.float32, interpret=cfg.interpret).astype(x.dtype)
+
+    # --- wgrad: batch-reduce GEMM per (r, s); reduce dim = minibatch -----
+    xpad = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    g2 = g.reshape(n * p * q, k)
+    dw_rs = []
+    for r in range(r_):
+        for s in range(s_):
+            xs = jax.lax.slice(
+                xpad,
+                (0, r, s, 0),
+                (n, r + (p - 1) * st + 1, s + (q - 1) * st + 1, c),
+                (1, st, st, 1),
+            ).reshape(n * p * q, c)
+            dw_rs.append(BK.matmul_pallas(
+                xs.T, g2, out_dtype=jnp.float32,
+                interpret=cfg.interpret))
+    dw = jnp.stack(dw_rs).reshape(r_, s_, c, k).astype(w.dtype)
+
+    dbias = None
+    if bias is not None:
+        dbias = g.astype(jnp.float32).sum(axis=(0, 1, 2)).astype(bias.dtype)
+    return dx, dw, dbias
+
+
+_conv_p.defvjp(_conv_fwd, _conv_bwd)
+
+
+def conv2d(
+    x,
+    w,
+    bias=None,
+    *,
+    stride: int = 1,
+    padding: int = 0,
+    activation: str = "none",
+    out_dtype=None,
+    backend: str | None = None,
+):
+    """Direct convolution via batch-reduce GEMM. NHWC x RSCK -> NHWC."""
+    from repro.kernels.brgemm.ops import resolve_backend, _interpret
+
+    be = resolve_backend(backend)
+    if be == "xla":
+        return R.conv2d_ref(
+            x, w, bias, stride=stride, padding=padding,
+            activation=activation, out_dtype=out_dtype)
+    cfg = _Cfg(stride, padding, activation, out_dtype, _interpret())
+    return _conv_p(cfg, x, w, bias)

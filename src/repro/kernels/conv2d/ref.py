@@ -1,0 +1,53 @@
+"""Reference oracles for the direct convolution (paper Algorithms 3/4).
+
+Two references:
+  * ``conv2d_ref``      — lax.conv_general_dilated (NHWC / RSCK), the fast
+    oracle used by tests and the XLA backend path.
+  * ``conv2d_loops_ref``— the paper's Algorithm 3 loop nest in pure Python/
+    numpy, used on tiny shapes to pin the *semantics* (stride handling,
+    padding, channel blocking) independently of XLA.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fusion
+
+
+def conv2d_ref(x, w, bias=None, *, stride: int = 1, padding: int = 0,
+               activation: str = "none", out_dtype=None):
+    """x: (N, H, W, C), w: (R, S, C, K) -> (N, P, Q, K)."""
+    out_dtype = out_dtype or x.dtype
+    y = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=((padding, padding), (padding, padding)),
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    y = fusion.apply(activation, y)
+    return y.astype(out_dtype)
+
+
+def conv2d_loops_ref(x, w, *, stride: int = 1, padding: int = 0):
+    """Paper Algorithm 3 as literal loops (tiny shapes only)."""
+    x = np.asarray(x, np.float32)
+    w = np.asarray(w, np.float32)
+    n_, h, wi, c = x.shape
+    r_, s_, _, k = w.shape
+    xp = np.pad(x, ((0, 0), (padding, padding), (padding, padding), (0, 0)))
+    p = (h + 2 * padding - r_) // stride + 1
+    q = (wi + 2 * padding - s_) // stride + 1
+    out = np.zeros((n_, p, q, k), np.float32)
+    for n in range(n_):
+        for oj in range(p):
+            for oi in range(q):
+                for r in range(r_):
+                    for s in range(s_):
+                        ij = oj * stride + r
+                        ii = oi * stride + s
+                        out[n, oj, oi, :] += xp[n, ij, ii, :] @ w[r, s, :, :]
+    return jnp.asarray(out)

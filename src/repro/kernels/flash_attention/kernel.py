@@ -1,0 +1,146 @@
+"""FlashAttention as a batch-reduce GEMM — the beyond-paper unification.
+
+Online-softmax attention is *exactly* the paper's kernel with a rescaling
+epilogue: the output block O accumulates `sum_j P_j @ V_j` over KV blocks
+(the reduce batch), with the running-max/denominator correction applied to
+the VMEM-resident accumulator between steps.  Structure shared with
+``kernels/brgemm``:
+
+  * grid = (batch, q_heads, q_blocks, kv_blocks); last axis "arbitrary",
+  * fp32 accumulator + (m, l) running statistics in VMEM scratch,
+  * GQA is zero-copy: the K/V BlockSpec index_map maps q-head -> kv-head
+    (h // group) — the paper's pointer-list trick again,
+  * causal/sliding-window masks applied in-register on the scores block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.blocking import round_up
+
+NEG_INF = -1e30
+STATS_LANES = 128
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "scale", "block_q", "block_k",
+                     "interpret"),
+)
+def flash_attention_pallas(
+    q,
+    k,
+    v,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    scale: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d) -> (B, Hq, Tq, d)."""
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    bq = min(round_up(tq, 8), block_q)
+    bk = min(round_up(tk, 128), block_k)
+    tqp, tkp = round_up(tq, bq), round_up(tk, bk)
+    dp = round_up(d, 128)
+
+    qp = jnp.pad(q, ((0, 0), (0, 0), (0, tqp - tq), (0, dp - d)))
+    kp = jnp.pad(k, ((0, 0), (0, 0), (0, tkp - tk), (0, dp - d)))
+    vp = jnp.pad(v, ((0, 0), (0, 0), (0, tkp - tk), (0, dp - d)))
+
+    grid = (b, hq, tqp // bq, tkp // bk)
+    nkv = tkp // bk
+
+    def body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+        j = pl.program_id(3)
+
+        @pl.when(j == 0)
+        def _():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+
+        i = pl.program_id(2)
+        q_start = i * bq
+        k_start = j * bk
+
+        def compute():
+            qb = q_ref[0, 0]          # (bq, dp)
+            kb = k_ref[0, 0]          # (bk, dp)
+            s = jax.lax.dot_general(
+                qb, kb, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32) * scale  # (bq, bk)
+
+            q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = k_pos < tk  # padded kv positions
+            if causal:
+                mask &= k_pos <= q_pos
+            if window is not None:
+                mask &= k_pos > q_pos - window
+            s = jnp.where(mask, s, NEG_INF)
+
+            m_prev = m_ref[:, :1]                       # (bq, 1)
+            l_prev = l_ref[:, :1]
+            m_cur = s.max(axis=-1, keepdims=True)
+            m_new = jnp.maximum(m_prev, m_cur)
+            p = jnp.exp(s - m_new)                      # (bq, bk)
+            corr = jnp.exp(m_prev - m_new)              # (bq, 1)
+            l_new = corr * l_prev + p.sum(axis=-1, keepdims=True)
+            acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+                p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
+            l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
+
+        if causal:
+            # Skip blocks strictly above the diagonal (no valid positions).
+            @pl.when(k_start <= q_start + bq - 1)
+            def _():
+                compute()
+        else:
+            compute()
+
+        @pl.when(j == nkv - 1)
+        def _():
+            l = l_ref[:, :1]
+            l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+            o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)[None, None]
+
+    out = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, dp), lambda b_, h, i, j: (b_, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, dp),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+            pl.BlockSpec((1, 1, bk, dp),
+                         lambda b_, h, i, j: (b_, h // group, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, dp),
+                               lambda b_, h, i, j: (b_, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, tqp, dp), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dp), jnp.float32),
+            pltpu.VMEM((bq, STATS_LANES), jnp.float32),
+            pltpu.VMEM((bq, STATS_LANES), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel",
+                                 "arbitrary"),
+        ),
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :, :tq, :d]

@@ -1,0 +1,67 @@
+"""Differentiable flash-attention entry point with backend dispatch.
+
+Backward uses the standard recompute strategy (FlashAttention-style): the
+VJP re-runs attention score blocks and accumulates dQ/dK/dV through the same
+batch-reduce structure.  On the XLA path autodiff handles it natively; on
+the Pallas path we use jax.custom_vjp with a jnp-recompute backward (the
+forward stays the fused kernel — the hot path for serving/prefill).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.brgemm.ops import resolve_backend, _interpret
+from repro.kernels.flash_attention import ref as R
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+
+
+class _Cfg(NamedTuple):
+    causal: bool
+    window: int | None
+    scale: float | None
+    interpret: bool
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash_p(cfg: _Cfg, q, k, v):
+    return flash_attention_pallas(
+        q, k, v, causal=cfg.causal, window=cfg.window, scale=cfg.scale,
+        interpret=cfg.interpret)
+
+
+def _flash_fwd(cfg, q, k, v):
+    y = _flash_p(cfg, q, k, v)
+    return y, (q, k, v)
+
+
+def _flash_bwd(cfg, res, dy):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: R.mha_ref(
+            q_, k_, v_, causal=cfg.causal, window=cfg.window,
+            scale=cfg.scale),
+        q, k, v)
+    return vjp(dy)
+
+
+_flash_p.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, scale: float | None = None,
+                    backend: str | None = None, xla_impl: str = "naive",
+                    unroll: bool = False):
+    """xla_impl: 'naive' (full T^2 softmax) or 'chunked' (online softmax,
+    flash semantics — the XLA-path memory optimization)."""
+    be = resolve_backend(backend)
+    if be == "xla":
+        if xla_impl == "chunked":
+            return R.mha_chunked(q, k, v, causal=causal, window=window,
+                                 scale=scale, unroll=unroll)
+        return R.mha_ref(q, k, v, causal=causal, window=window, scale=scale)
+    cfg = _Cfg(causal, window, scale, _interpret())
+    return _flash_p(cfg, q, k, v)

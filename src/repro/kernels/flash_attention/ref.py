@@ -1,0 +1,108 @@
+"""Pure-jnp attention oracles (GQA, causal, sliding-window, offset).
+
+``mha_ref``      — naive full-T^2 softmax (the semantic oracle).
+``mha_chunked``  — online-softmax over KV chunks: the *same math as the
+Pallas flash kernel*, expressed in lax.scan so the XLA path never
+materializes the (Tq, Tk) score matrix.  This is the memory-term
+optimization of §Perf iteration 3 (and doubles as a second oracle for the
+Pallas kernel).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def mha_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+            scale: float | None = None, q_offset: int = 0,
+            kv_len: int | None = None):
+    """q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d). Hq % Hkv == 0.
+
+    ``q_offset``: absolute position of q[0] (decode: Tq=1, offset=pos).
+    ``kv_len``: number of valid kv positions (for padded decode caches).
+    ``window``: sliding-window size (positions < pos-window+1 masked).
+    """
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    q_pos = q_offset + jnp.arange(tq)[:, None]
+    k_pos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    if kv_len is not None:
+        mask &= k_pos < kv_len
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def mha_chunked(q, k, v, *, causal: bool = True, window: int | None = None,
+                scale: float | None = None, chunk: int = 1024,
+                unroll: bool = False):
+    """Online-softmax attention over KV chunks (flash semantics, pure jnp).
+
+    Peak intermediate is (B, Hq, Tq, chunk) instead of (B, Hq, Tq, Tk).
+    """
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    group = hq // hkv
+    scale = scale if scale is not None else d ** -0.5
+    if group > 1:
+        k = jnp.repeat(k, group, axis=1)
+        v = jnp.repeat(v, group, axis=1)
+
+    c = min(chunk, tk)
+    pad = (-tk) % c
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    nc = (tk + pad) // c
+    kc = k.reshape(b, hq, nc, c, d).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hq, nc, c, d).transpose(2, 0, 1, 3, 4)
+    k_pos = jnp.arange(nc * c).reshape(nc, c)
+    q_pos = jnp.arange(tq)[:, None]
+
+    def step(carry, xs):
+        acc, m, l = carry
+        kb, vb, kp = xs
+        s = jnp.einsum("bhqd,bhkd->bhqk", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        mask = kp[None, :] < tk
+        if causal:
+            mask &= kp[None, :] <= q_pos
+        if window is not None:
+            mask &= kp[None, :] > q_pos - window
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l = corr * l + p.sum(axis=-1, keepdims=True)
+        acc = corr * acc + jnp.einsum(
+            "bhqk,bhkd->bhqd", p.astype(vb.dtype), vb,
+            preferred_element_type=jnp.float32)
+        return (acc, m_new, l), None
+
+    acc0 = jnp.zeros((b, hq, tq, d), jnp.float32)
+    m0 = jnp.full((b, hq, tq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, tq, 1), jnp.float32)
+    (acc, m, l), _ = jax.lax.scan(step, (acc0, m0, l0), (kc, vc, k_pos),
+                                  unroll=unroll)
+    l = jnp.where(l == 0.0, 1.0, l)
+    return (acc / l).astype(q.dtype)

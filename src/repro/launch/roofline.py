@@ -1,0 +1,186 @@
+"""Roofline analysis from the dry-run artifacts (TPU v5e targets).
+
+Per (arch x shape), single-pod mesh:
+  compute    = HLO_FLOPs / (chips * 197 TFLOP/s)
+  memory     = HLO_bytes / (chips * 819 GB/s)
+  collective = collective_bytes / (chips * 50 GB/s/link)
+
+The dry-run records *per-device* flops/bytes (XLA cost analysis runs on the
+SPMD-partitioned per-device module), so terms divide by the per-chip peak
+directly.  MODEL_FLOPS uses 6*N*D (dense) / 6*N_active*D (MoE) for train
+and 2*N*D_tokens for inference shapes; the ratio MODEL/HLO exposes remat
+and dispatch overheads.
+
+Note on the memory term: XLA's "bytes accessed" counts every HLO buffer
+read/write (no fusion credit), so it is an upper bound — on TPU, Mosaic/XLA
+fusion keeps most intermediates in VMEM.  It is still the right
+*optimization signal*: changes that reduce it (remat policy, fusion,
+layout) reduce real HBM traffic.
+
+Usage:
+  python -m repro.launch.roofline                  # full table (markdown)
+  python -m repro.launch.roofline --json out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro import configs
+from repro.configs.shapes import SHAPES
+from repro.models import api
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
+
+PEAK_FLOPS = 197e12      # bf16 / chip
+HBM_BW = 819e9           # B/s / chip
+ICI_BW = 50e9            # B/s / link
+
+
+def _attn_layer_count(cfg) -> int:
+    if cfg.block == "rglru_hybrid":
+        return (cfg.n_layers // len(cfg.pattern)) * cfg.pattern.count("attn")
+    if cfg.block == "xlstm":
+        return 0
+    if cfg.block == "encdec":
+        return cfg.n_enc_layers + 2 * cfg.n_layers  # self + cross
+    return cfg.n_layers
+
+
+def model_flops(arch_name: str, shape_name: str) -> float:
+    """6*N*D (param term) + 12*L*B*T^2*H*dh/2 (causal attention term) for
+    train; 1/3 of the multiplier for forward-only shapes."""
+    cfg = configs.get(arch_name)
+    shape = SHAPES[shape_name]
+    total, active = cfg.param_counts()
+    n = active  # 6*N_active*D for MoE == 6*N*D for dense (active == total)
+    tl = api.token_len(cfg, shape)
+    la = _attn_layer_count(cfg)
+    dh = cfg.qk_nope_dim + cfg.qk_rope_dim if cfg.mla else cfg.dh
+    h = cfg.n_heads
+
+    def attn_flops(t_q, t_kv, fwd_only):
+        if la == 0:
+            return 0.0
+        window = min(cfg.window or t_kv, t_kv)
+        eff_kv = min(window, t_kv)
+        mult = 4.0 if fwd_only else 12.0   # 2 matmuls fwd (+4 bwd) * 2 flops
+        causal = 0.5 if t_q == t_kv else 1.0
+        return mult * la * h * dh * t_q * eff_kv * causal
+
+    if shape.kind == "train":
+        tokens = shape.global_batch * tl
+        return (6.0 * n * tokens
+                + shape.global_batch * attn_flops(tl, tl, False))
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * tl
+        return (2.0 * n * tokens
+                + shape.global_batch * attn_flops(tl, tl, True))
+    tokens = shape.global_batch * 1
+    return (2.0 * n * tokens
+            + shape.global_batch * attn_flops(1, shape.seq_len, True))
+
+
+def load_cell(arch: str, shape: str, mesh: str = "single", tag: str = ""):
+    suffix = f"_{tag}" if tag else ""
+    # prefer the trip-count-exact cost artifact; fall back to the rolled
+    # compile-proof record
+    for prefix in ("cost", "dryrun"):
+        f = ART / f"{prefix}_{arch}_{shape}_{mesh}{suffix}.json"
+        if f.exists():
+            return json.loads(f.read_text())
+    return None
+
+
+def analyze(rec: dict) -> dict | None:
+    if rec is None or rec.get("status") != "ok":
+        return None
+    n = rec["n_devices"]
+    flops_dev = rec["flops_per_device"] or 0.0
+    bytes_dev = rec["bytes_accessed_per_device"] or 0.0
+    coll_dev = rec["collective_bytes_per_device"].get("total", 0.0)
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_global = flops_dev * n
+    out = {
+        **{f"t_{k}_s": v for k, v in terms.items()},
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_ratio": mf / hlo_global if hlo_global else 0.0,
+        # fraction of the compute roofline actually achieved if the machine
+        # ran at the dominant term's speed (the score axis)
+        "roofline_fraction": (mf / n / PEAK_FLOPS) / max(terms.values())
+        if max(terms.values()) > 0 else 0.0,
+    }
+    return out
+
+
+_SUGGEST = {
+    "compute": ("raise MXU utilization: larger per-chip batch/microbatch, "
+                "fuse small ops into the brgemm epilogues"),
+    "memory": ("cut HBM traffic: relax remat recompute, fuse elementwise "
+               "chains, cast activations/caches to bf16/int8"),
+    "collective": ("re-shard: move the dominant all-gather/all-to-all to a "
+                   "different axis, overlap with compute, or compress"),
+}
+
+
+def table(mesh: str = "single"):
+    rows = []
+    for arch in configs.ARCH_NAMES:
+        for shape in SHAPES:
+            rec = load_cell(arch, shape, mesh)
+            if rec is None:
+                continue
+            if rec["status"] == "skipped":
+                rows.append({"arch": arch, "shape": shape,
+                             "status": "skipped",
+                             "reason": rec["reason"][:60]})
+                continue
+            a = analyze(rec)
+            rows.append({"arch": arch, "shape": shape, "status": "ok",
+                         **a, "suggest": _SUGGEST[a["dominant"]]})
+    return rows
+
+
+def to_markdown(rows) -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant |"
+        " MODEL_FLOPS | useful | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | skipped |"
+                f" — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} |"
+            f" {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} |"
+            f" {r['dominant']} | {r['model_flops']:.2e} |"
+            f" {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=("single", "multi"))
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = table(args.mesh)
+    print(to_markdown(rows))
+    if args.json:
+        pathlib.Path(args.json).write_text(json.dumps(rows, indent=1))
+
+
+if __name__ == "__main__":
+    main()

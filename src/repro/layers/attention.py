@@ -1,0 +1,274 @@
+"""Attention layers: GQA/MQA (+ sliding window) and MLA (DeepSeek-V3).
+
+All projections route through the batch-reduce GEMM building block; the
+attention inner loop uses the flash kernel (itself a batch-reduce GEMM with
+online-softmax epilogue) on the Pallas backend, or the jnp oracle on XLA.
+
+Three modes:
+  * train    — full causal sequence, no cache,
+  * prefill  — train-compute + returns the KV cache,
+  * decode   — one token against a (padded) cache; GQA caches (k, v), MLA
+    caches the *compressed* (c_kv, k_rope) and uses the absorbed-matmul
+    formulation (the memory win that motivates MLA).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brgemm
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import mha_ref
+from repro.layers import norms
+from repro.layers.rope import apply_rope
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int | None = None
+    rope_theta: float = 10000.0
+    window: int | None = None          # sliding-window size (None = full)
+    # --- MLA (used when mla=True) ---
+    mla: bool = False
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_dim: int = 128
+    qk_rope_dim: int = 64
+    v_head_dim: int = 128
+    xla_impl: str = "naive"       # XLA-path attention: naive | chunked
+    unroll: bool = False
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+
+def _lin(key, cin, cout, dtype):
+    return (jax.random.normal(key, (cin, cout), jnp.float32)
+            * (1.0 / cin) ** 0.5).astype(dtype)
+
+
+def init(key, cfg: AttnCfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    if not cfg.mla:
+        dh = cfg.dh
+        return {
+            "wq": _lin(ks[0], cfg.d_model, cfg.n_heads * dh, dtype),
+            "wk": _lin(ks[1], cfg.d_model, cfg.n_kv_heads * dh, dtype),
+            "wv": _lin(ks[2], cfg.d_model, cfg.n_kv_heads * dh, dtype),
+            "wo": _lin(ks[3], cfg.n_heads * dh, cfg.d_model, dtype),
+        }
+    qk_dim = cfg.qk_nope_dim + cfg.qk_rope_dim
+    return {
+        "wq_a": _lin(ks[0], cfg.d_model, cfg.q_lora_rank, dtype),
+        "q_norm": norms.rmsnorm_init(cfg.q_lora_rank, dtype),
+        "wq_b": _lin(ks[1], cfg.q_lora_rank, cfg.n_heads * qk_dim, dtype),
+        "wkv_a": _lin(ks[2], cfg.d_model,
+                      cfg.kv_lora_rank + cfg.qk_rope_dim, dtype),
+        "kv_norm": norms.rmsnorm_init(cfg.kv_lora_rank, dtype),
+        "wkv_b": _lin(ks[3], cfg.kv_lora_rank,
+                      cfg.n_heads * (cfg.qk_nope_dim + cfg.v_head_dim),
+                      dtype),
+        "wo": _lin(ks[4], cfg.n_heads * cfg.v_head_dim, cfg.d_model, dtype),
+    }
+
+
+def init_cache(cfg: AttnCfg, batch: int, max_len: int, dtype=jnp.float32):
+    if cfg.mla:
+        return {
+            "c_kv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+        }
+    dh = cfg.dh
+    return {
+        "k": jnp.zeros((batch, cfg.n_kv_heads, max_len, dh), dtype),
+        "v": jnp.zeros((batch, cfg.n_kv_heads, max_len, dh), dtype),
+    }
+
+
+def _split_heads(x, n_heads):
+    b, t, _ = x.shape
+    return x.reshape(b, t, n_heads, -1).transpose(0, 2, 1, 3)  # (B,H,T,dh)
+
+
+def _merge_heads(x):
+    b, h, t, dh = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, t, h * dh)
+
+
+# --------------------------------------------------------------------------
+# GQA
+# --------------------------------------------------------------------------
+
+def _gqa_qkv(params, x, cfg, positions, backend):
+    q = _split_heads(brgemm.matmul(x, params["wq"], backend=backend),
+                     cfg.n_heads)
+    k = _split_heads(brgemm.matmul(x, params["wk"], backend=backend),
+                     cfg.n_kv_heads)
+    v = _split_heads(brgemm.matmul(x, params["wv"], backend=backend),
+                     cfg.n_kv_heads)
+    q = apply_rope(q, positions, theta=cfg.rope_theta)
+    k = apply_rope(k, positions, theta=cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_train(params, x, cfg, backend):
+    positions = jnp.arange(x.shape[1])
+    q, k, v = _gqa_qkv(params, x, cfg, positions, backend)
+    o = flash_attention(q, k, v, causal=True, window=cfg.window,
+                        backend=backend, xla_impl=cfg.xla_impl,
+                        unroll=cfg.unroll)
+    return brgemm.matmul(_merge_heads(o), params["wo"], backend=backend)
+
+
+def _gqa_prefill(params, x, cfg, cache, backend):
+    positions = jnp.arange(x.shape[1])
+    q, k, v = _gqa_qkv(params, x, cfg, positions, backend)
+    o = flash_attention(q, k, v, causal=True, window=cfg.window,
+                        backend=backend, xla_impl=cfg.xla_impl,
+                        unroll=cfg.unroll)
+    t = x.shape[1]
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, 0, 0, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, 0, 0))
+    y = brgemm.matmul(_merge_heads(o), params["wo"], backend=backend)
+    return y, cache
+
+
+def _gqa_decode(params, x, cfg, cache, pos, backend):
+    positions = jnp.full((x.shape[1],), pos)
+    q, k, v = _gqa_qkv(params, x, cfg, positions, backend)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
+    o = mha_ref(q, cache["k"], cache["v"], causal=False, window=cfg.window,
+                q_offset=pos, kv_len=pos + 1)
+    y = brgemm.matmul(_merge_heads(o), params["wo"], backend=backend)
+    return y, cache
+
+
+# --------------------------------------------------------------------------
+# MLA
+# --------------------------------------------------------------------------
+
+def _mla_q(params, x, cfg, positions, backend):
+    b, t, _ = x.shape
+    cq = norms.rmsnorm(params["q_norm"],
+                       brgemm.matmul(x, params["wq_a"], backend=backend))
+    q = brgemm.matmul(cq, params["wq_b"], backend=backend)
+    q = q.reshape(b, t, cfg.n_heads, cfg.qk_nope_dim + cfg.qk_rope_dim)
+    q = q.transpose(0, 2, 1, 3)
+    q_nope, q_rope = (q[..., :cfg.qk_nope_dim],
+                      q[..., cfg.qk_nope_dim:])
+    q_rope = apply_rope(q_rope, positions, theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_compressed_kv(params, x, cfg, positions, backend):
+    ckv_full = brgemm.matmul(x, params["wkv_a"], backend=backend)
+    c_kv = norms.rmsnorm(params["kv_norm"],
+                         ckv_full[..., :cfg.kv_lora_rank])
+    k_rope = ckv_full[..., cfg.kv_lora_rank:]          # (B, T, rope)
+    k_rope = apply_rope(k_rope[:, None], positions,
+                        theta=cfg.rope_theta)[:, 0]
+    return c_kv, k_rope
+
+
+def _mla_full(params, x, cfg, backend):
+    """Train/prefill: expand the compressed KV to per-head K/V."""
+    b, t, _ = x.shape
+    positions = jnp.arange(t)
+    q_nope, q_rope = _mla_q(params, x, cfg, positions, backend)
+    c_kv, k_rope = _mla_compressed_kv(params, x, cfg, positions, backend)
+
+    kv = brgemm.matmul(c_kv, params["wkv_b"], backend=backend)
+    kv = kv.reshape(b, t, cfg.n_heads, cfg.qk_nope_dim + cfg.v_head_dim)
+    kv = kv.transpose(0, 2, 1, 3)
+    k_nope, v = kv[..., :cfg.qk_nope_dim], kv[..., cfg.qk_nope_dim:]
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, None],
+                                  (b, cfg.n_heads, t, cfg.qk_rope_dim))],
+        axis=-1)
+    scale = (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    o = flash_attention(q, k, v, causal=True, scale=scale, backend=backend,
+                        xla_impl=cfg.xla_impl, unroll=cfg.unroll)
+    y = brgemm.matmul(_merge_heads(o), params["wo"], backend=backend)
+    return y, c_kv, k_rope
+
+
+def _mla_decode(params, x, cfg, cache, pos, backend):
+    """Absorbed-matmul decode against the compressed cache."""
+    b, t, _ = x.shape
+    positions = jnp.full((t,), pos)
+    q_nope, q_rope = _mla_q(params, x, cfg, positions, backend)
+    c_kv_new, k_rope_new = _mla_compressed_kv(params, x, cfg, positions,
+                                              backend)
+    cache = dict(cache)
+    cache["c_kv"] = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    cache["k_rope"] = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+        (0, pos, 0))
+
+    wkv_b = params["wkv_b"].reshape(
+        cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_dim + cfg.v_head_dim)
+    w_uk = wkv_b[..., :cfg.qk_nope_dim]    # (L, H, nope)
+    w_uv = wkv_b[..., cfg.qk_nope_dim:]    # (L, H, v)
+
+    q_eff = jnp.einsum("bhqn,lhn->bhql", q_nope, w_uk)
+    s = (jnp.einsum("bhql,bsl->bhqs", q_eff, cache["c_kv"],
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhqr,bsr->bhqs", q_rope, cache["k_rope"],
+                      preferred_element_type=jnp.float32))
+    s = s * (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    kv_len = pos + 1
+    mask = jnp.arange(cache["c_kv"].shape[1])[None, None, None] < kv_len
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_c = jnp.einsum("bhqs,bsl->bhql", p, cache["c_kv"])
+    o = jnp.einsum("bhql,lhv->bhqv", o_c, w_uv)
+    y = brgemm.matmul(_merge_heads(o), params["wo"], backend=backend)
+    return y, cache
+
+
+# --------------------------------------------------------------------------
+# public API
+# --------------------------------------------------------------------------
+
+def apply(params, x, cfg: AttnCfg, *, mode: str = "train", cache=None,
+          pos=0, backend: str | None = None):
+    """x: (B, T, D). Returns y for train, (y, cache) for prefill/decode."""
+    if cfg.mla:
+        if mode == "train":
+            y, _, _ = _mla_full(params, x, cfg, backend)
+            return y
+        if mode == "prefill":
+            y, c_kv, k_rope = _mla_full(params, x, cfg, backend)
+            cache = dict(cache)
+            cache["c_kv"] = jax.lax.dynamic_update_slice(
+                cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), (0, 0, 0))
+            cache["k_rope"] = jax.lax.dynamic_update_slice(
+                cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
+                (0, 0, 0))
+            return y, cache
+        if mode == "decode":
+            return _mla_decode(params, x, cfg, cache, pos, backend)
+        raise ValueError(mode)
+    if mode == "train":
+        return _gqa_train(params, x, cfg, backend)
+    if mode == "prefill":
+        return _gqa_prefill(params, x, cfg, cache, backend)
+    if mode == "decode":
+        return _gqa_decode(params, x, cfg, cache, pos, backend)
+    raise ValueError(mode)

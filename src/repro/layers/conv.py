@@ -1,0 +1,24 @@
+"""Convolution layer — paper Algorithm 4 wrapped as a parametrized layer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv2d import conv2d
+
+
+def init(key, c: int, k: int, r: int, s: int, *, use_bias: bool = True,
+         dtype=jnp.float32):
+    fan_in = c * r * s
+    params = {"w": (jax.random.normal(key, (r, s, c, k), jnp.float32)
+                    * (2.0 / fan_in) ** 0.5).astype(dtype)}
+    if use_bias:
+        params["b"] = jnp.zeros((k,), dtype)
+    return params
+
+
+def apply(params, x, *, stride: int = 1, padding: int = 0,
+          activation: str = "none", backend: str | None = None):
+    return conv2d(
+        x, params["w"], params.get("b"), stride=stride, padding=padding,
+        activation=activation, backend=backend)

@@ -1,0 +1,22 @@
+"""Token embedding table + (optionally tied) output head."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brgemm
+
+
+def init(key, vocab: int, d: int, *, dtype=jnp.float32):
+    emb = jax.random.normal(key, (vocab, d), jnp.float32) * (1.0 / d) ** 0.5
+    return {"table": emb.astype(dtype)}
+
+
+def encode(params, tokens):
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def decode(params, x, *, backend: str | None = None):
+    """Logits = x @ table^T via the building block. x: (..., d)."""
+    return brgemm.matmul(
+        x, params["table"].T, out_dtype=jnp.float32, backend=backend)

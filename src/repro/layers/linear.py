@@ -1,0 +1,32 @@
+"""Fully-connected layer via batch-reduce GEMM — paper Algorithm 5.
+
+The paper blocks W[K][C] -> W[Kb][Cb][bc][bk] so the microkernel sees
+unit-stride panels; on TPU that blocking *is* the BlockSpec tiling of the
+Pallas kernel (the logical parameter layout stays (C, K) and Mosaic handles
+physical tiling).  The activation is fused on the VMEM-resident accumulator
+(Alg 5 line 10: "while the output block Y is still hot in cache").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brgemm
+
+
+def init(key, c: int, k: int, *, use_bias: bool = True,
+         dtype=jnp.float32, scale: float | None = None):
+    wkey, _ = jax.random.split(key)
+    scale = scale if scale is not None else (1.0 / c) ** 0.5
+    params = {"w": (jax.random.normal(wkey, (c, k), jnp.float32) * scale
+                    ).astype(dtype)}
+    if use_bias:
+        params["b"] = jnp.zeros((k,), dtype)
+    return params
+
+
+def apply(params, x, *, activation: str = "none", backend: str | None = None):
+    """y = act(x @ W + b).  x: (..., C) -> (..., K)."""
+    return brgemm.matmul(
+        x, params["w"], params.get("b"), activation=activation,
+        backend=backend)

@@ -1,0 +1,41 @@
+"""Transformer MLP blocks via batch-reduce GEMM (dense + gated variants).
+
+The activation is fused into the first GEMM's epilogue (paper Sec. 3.3.2 —
+"apply g() while the output block is still hot").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brgemm
+
+
+def init(key, d: int, d_ff: int, *, gated: bool = True, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    s_in = (1.0 / d) ** 0.5
+    s_out = (1.0 / d_ff) ** 0.5
+    params = {
+        "w_up": (jax.random.normal(ks[0], (d, d_ff), jnp.float32) * s_in
+                 ).astype(dtype),
+        "w_down": (jax.random.normal(ks[1], (d_ff, d), jnp.float32) * s_out
+                   ).astype(dtype),
+    }
+    if gated:
+        params["w_gate"] = (jax.random.normal(ks[2], (d, d_ff), jnp.float32)
+                            * s_in).astype(dtype)
+    return params
+
+
+def apply(params, x, *, activation: str = "silu",
+          backend: str | None = None):
+    if "w_gate" in params:
+        # SwiGLU/GeGLU: act(x W_gate) * (x W_up), activation fused in-kernel
+        g = brgemm.matmul(x, params["w_gate"], activation=activation,
+                          backend=backend)
+        u = brgemm.matmul(x, params["w_up"], backend=backend)
+        h = g * u
+    else:
+        h = brgemm.matmul(x, params["w_up"], activation=activation,
+                          backend=backend)
+    return brgemm.matmul(h, params["w_down"], backend=backend)

@@ -1,0 +1,29 @@
+"""Normalization layers (fp32 statistics regardless of param dtype)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jnp.reciprocal(jnp.sqrt(var + eps))
+    return (y * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, *, eps: float = 1e-5):
+    x32 = x.astype(jnp.float32)
+    mean = x32.mean(axis=-1, keepdims=True)
+    var = ((x32 - mean) ** 2).mean(axis=-1, keepdims=True)
+    y = (x32 - mean) * jnp.reciprocal(jnp.sqrt(var + eps))
+    y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(
+        jnp.float32)
+    return y.astype(x.dtype)

@@ -1,0 +1,382 @@
+"""Recurrent layers: RG-LRU (Griffin/RecurrentGemma), mLSTM and sLSTM (xLSTM).
+
+These are the paper's LSTM lineage (Sec. 3.1) carried to the 2024 assigned
+architectures: every projection is a batch-reduce GEMM; the recurrences are
+the fused-elementwise epilogues.
+
+  * RG-LRU: diagonal linear recurrence -> parallel ``associative_scan`` for
+    train/prefill, O(1) step for decode.
+  * mLSTM: matrix-memory recurrence with exponential gating.  The naive
+    per-step scan stores T copies of the (dk x dv) state in backward — fatal
+    at seq 4k — so training uses the *chunkwise-parallel* form (inter-chunk
+    state recurrence + intra-chunk attention-like compute), validated against
+    the scan oracle in tests.
+  * sLSTM: scalar-memory recurrence with block-diagonal (per-head) recurrent
+    weights; genuinely sequential (the architecture's semantics), via scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brgemm
+from repro.layers import norms
+
+_LOG_EPS = -1e30
+
+
+# ==========================================================================
+# RG-LRU
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUCfg:
+    d_model: int
+    d_rnn: int
+    conv_width: int = 4
+    c: float = 8.0
+
+
+def rglru_init(key, cfg: RGLRUCfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    d, dr = cfg.d_model, cfg.d_rnn
+    s, sr = (1.0 / d) ** 0.5, (1.0 / dr) ** 0.5
+
+    def lin(k_, ci, co):
+        return (jax.random.normal(k_, (ci, co), jnp.float32)
+                * (1.0 / ci) ** 0.5).astype(dtype)
+
+    # Lambda init so a = sigmoid(lam) in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[5], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u / (1 - u))
+    return {
+        "w_gelu": lin(ks[0], d, dr),
+        "w_rnn_in": lin(ks[1], d, dr),
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv_width, dr), jnp.float32)
+                   * sr).astype(dtype),
+        "w_rgate": lin(ks[3], dr, dr),
+        "b_rgate": jnp.zeros((dr,), dtype),
+        "w_igate": lin(ks[4], dr, dr),
+        "b_igate": jnp.zeros((dr,), dtype),
+        "lam": lam.astype(dtype),
+        "w_out": lin(ks[6], dr, d),
+    }
+
+
+def _causal_depthwise_conv(v, conv_w, prefix=None):
+    """v: (B, T, d); conv_w: (W, d). prefix: (B, W-1, d) carried context."""
+    w = conv_w.shape[0]
+    if prefix is None:
+        prefix = jnp.zeros((v.shape[0], w - 1, v.shape[2]), v.dtype)
+    vp = jnp.concatenate([prefix, v], axis=1)
+    out = sum(vp[:, i:i + v.shape[1]] * conv_w[i] for i in range(w))
+    return out, vp[:, -(w - 1):]
+
+
+def _rglru_gates(params, v, cfg):
+    r = brgemm.matmul(v, params["w_rgate"], params["b_rgate"],
+                      activation="sigmoid")
+    i = brgemm.matmul(v, params["w_igate"], params["b_igate"],
+                      activation="sigmoid")
+    log_a = (-cfg.c * jax.nn.softplus(params["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) input normalizer (Griffin Eq. 4)
+    norm = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b = norm * (i.astype(jnp.float32) * v.astype(jnp.float32))
+    return a, b
+
+
+def rglru_apply(params, x, cfg: RGLRUCfg, *, state=None,
+                backend: str | None = None):
+    """x: (B, T, D) -> (y, state). state = {"h", "conv"} for decode."""
+    u = brgemm.matmul(x, params["w_gelu"], activation="gelu",
+                      backend=backend)
+    v = brgemm.matmul(x, params["w_rnn_in"], backend=backend)
+    prefix = state["conv"] if state is not None else None
+    v, conv_state = _causal_depthwise_conv(v, params["conv_w"], prefix)
+    a, b = _rglru_gates(params, v, cfg)
+
+    if x.shape[1] == 1 and state is not None:      # decode step
+        h = a[:, 0] * state["h"] + b[:, 0]
+        h_seq = h[:, None]
+    else:                                          # parallel scan
+        if state is not None:                      # inject carried h0
+            b = b.at[:, 0].add(a[:, 0] * state["h"])
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+        _, h_seq = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = h_seq[:, -1]
+
+    y = brgemm.matmul((u.astype(jnp.float32) * h_seq).astype(x.dtype),
+                      params["w_out"], backend=backend)
+    return y, {"h": h, "conv": conv_state}
+
+
+# ==========================================================================
+# mLSTM
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMCfg:
+    d_model: int
+    n_heads: int
+    dk: int
+    dv: int
+    chunk: int = 128
+    unroll: bool = False
+
+
+def mlstm_init(key, cfg: MLSTMCfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 7)
+    d, h = cfg.d_model, cfg.n_heads
+
+    def lin(k_, ci, co):
+        return (jax.random.normal(k_, (ci, co), jnp.float32)
+                * (1.0 / ci) ** 0.5).astype(dtype)
+
+    return {
+        "wq": lin(ks[0], d, h * cfg.dk),
+        "wk": lin(ks[1], d, h * cfg.dk),
+        "wv": lin(ks[2], d, h * cfg.dv),
+        "wi": lin(ks[3], d, h), "bi": jnp.zeros((h,), dtype),
+        "wf": lin(ks[4], d, h),
+        # forget bias init positive -> long memory at init (xLSTM paper)
+        "bf": jnp.full((h,), 3.0, dtype),
+        "wo": lin(ks[5], d, h * cfg.dv),
+        "head_norm": norms.rmsnorm_init(cfg.dv, dtype),
+        "w_out": lin(ks[6], h * cfg.dv, d),
+    }
+
+
+def mlstm_scan(q, k, v, logi, logf):
+    """Stabilized per-step scan oracle.
+
+    q,k: (B,H,T,dk); v: (B,H,T,dv); logi,logf: (B,H,T). -> h: (B,H,T,dv)
+    """
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    n0 = jnp.zeros((b, h, dk), jnp.float32)
+    m0 = jnp.full((b, h), _LOG_EPS, jnp.float32)
+
+    def step(carry, xs):
+        c, n, m = carry
+        q_t, k_t, v_t, li, lf = xs
+        m_new = jnp.maximum(lf + m, li)
+        i_p = jnp.exp(li - m_new)[..., None]
+        f_p = jnp.exp(lf + m - m_new)[..., None]
+        n_new = f_p * n + i_p * k_t
+        c_new = f_p[..., None] * c + i_p[..., None] * (
+            k_t[..., :, None] * v_t[..., None, :])
+        num = jnp.einsum("bhk,bhkv->bhv", q_t, c_new)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", q_t, n_new))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (c_new, n_new, m_new), num / den
+
+    xs = (q.transpose(2, 0, 1, 3).astype(jnp.float32),
+          k.transpose(2, 0, 1, 3).astype(jnp.float32),
+          v.transpose(2, 0, 1, 3).astype(jnp.float32),
+          logi.transpose(2, 0, 1), logf.transpose(2, 0, 1))
+    (c, n, m), hs = jax.lax.scan(step, (c0, n0, m0), xs)
+    return hs.transpose(1, 2, 0, 3), (c, n, m)
+
+
+def mlstm_chunkwise(q, k, v, logi, logf, *, chunk: int = 128, state=None,
+                    unroll: bool = False):
+    """Chunkwise-parallel stabilized mLSTM (training path).
+
+    Splits T into chunks; inter-chunk (C, n, m) recurrence via scan over
+    chunks, intra-chunk compute is attention-like (L x L) — so backward
+    stores only per-chunk states, not per-step matrix memories.
+    """
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    l = min(chunk, t)
+    assert t % l == 0, (t, l)
+    nc = t // l
+
+    def to_chunks(x):
+        return x.reshape(b, h, nc, l, *x.shape[4:] if x.ndim > 4 else
+                         x.shape[4:]) if False else x
+
+    qc = q.reshape(b, h, nc, l, dk).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    kc = k.reshape(b, h, nc, l, dk).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    vc = v.reshape(b, h, nc, l, dv).transpose(2, 0, 1, 3, 4).astype(jnp.float32)
+    lic = logi.reshape(b, h, nc, l).transpose(2, 0, 1, 3)
+    lfc = logf.reshape(b, h, nc, l).transpose(2, 0, 1, 3)
+
+    if state is None:
+        c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+        m0 = jnp.full((b, h), _LOG_EPS, jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    tri = jnp.tril(jnp.ones((l, l), bool))
+
+    def chunk_step(carry, xs):
+        c, n, m = xs_c = carry
+        q_t, k_t, v_t, li, lf = xs          # (B,H,L,*), (B,H,L)
+        bcum = jnp.cumsum(lf, axis=-1)       # inclusive cumsum of log f
+        g_tot = bcum[..., -1:]               # (B,H,1)
+
+        # intra-chunk log-decay scores s[t, tau] = b_t - b_tau + li_tau
+        s = (bcum[..., :, None] - bcum[..., None, :] + li[..., None, :])
+        s = jnp.where(tri, s, _LOG_EPS)      # causal within chunk
+        a_state = bcum + m[..., None]        # state-path log weight (B,H,L)
+
+        m_t = jnp.maximum(a_state, s.max(axis=-1))         # (B,H,L)
+        p = jnp.exp(s - m_t[..., None])                    # (B,H,L,L)
+        state_w = jnp.exp(a_state - m_t)                   # (B,H,L)
+
+        qk = jnp.einsum("bhtd,bhsd->bhts", q_t, k_t)
+        num = (state_w[..., None] * jnp.einsum("bhtd,bhdv->bhtv", q_t, c)
+               + jnp.einsum("bhts,bhts,bhsv->bhtv", p, qk, v_t))
+        den = (state_w * jnp.einsum("bhtd,bhd->bht", q_t, n)
+               + jnp.einsum("bhts,bhts->bht", p, qk))
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        h_out = num / den
+
+        # end-of-chunk state update
+        w_tok = g_tot - bcum + li                          # (B,H,L)
+        m_new = jnp.maximum(g_tot[..., 0] + m, w_tok.max(axis=-1))
+        carry_w = jnp.exp(g_tot[..., 0] + m - m_new)
+        tok_w = jnp.exp(w_tok - m_new[..., None])
+        c_new = (carry_w[..., None, None] * c
+                 + jnp.einsum("bhs,bhsd,bhsv->bhdv", tok_w, k_t, v_t))
+        n_new = carry_w[..., None] * n + jnp.einsum(
+            "bhs,bhsd->bhd", tok_w, k_t)
+        return (c_new, n_new, m_new), h_out
+
+    (c, n, m), hs = jax.lax.scan(chunk_step, (c0, n0, m0),
+                                 (qc, kc, vc, lic, lfc), unroll=unroll)
+    hs = hs.transpose(1, 2, 0, 3, 4).reshape(b, h, t, dv)
+    return hs, (c, n, m)
+
+
+def mlstm_step(q1, k1, v1, li1, lf1, state):
+    """Single decode step. q1,k1: (B,H,dk); v1: (B,H,dv); li1,lf1: (B,H)."""
+    c, n, m = state
+    m_new = jnp.maximum(lf1 + m, li1)
+    i_p = jnp.exp(li1 - m_new)[..., None]
+    f_p = jnp.exp(lf1 + m - m_new)[..., None]
+    n_new = f_p * n + i_p * k1
+    c_new = f_p[..., None] * c + i_p[..., None] * (
+        k1[..., :, None] * v1[..., None, :])
+    num = jnp.einsum("bhk,bhkv->bhv", q1, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q1, n_new)),
+                      jnp.exp(-m_new))[..., None]
+    return num / den, (c_new, n_new, m_new)
+
+
+def mlstm_apply(params, x, cfg: MLSTMCfg, *, state=None,
+                backend: str | None = None):
+    """x: (B, T, D) -> (y, state)."""
+    b, t, _ = x.shape
+    h = cfg.n_heads
+
+    def heads(y, dh):
+        return y.reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+
+    q = heads(brgemm.matmul(x, params["wq"], backend=backend), cfg.dk)
+    k = heads(brgemm.matmul(x, params["wk"], backend=backend), cfg.dk)
+    k = k * (cfg.dk ** -0.5)
+    v = heads(brgemm.matmul(x, params["wv"], backend=backend), cfg.dv)
+    logi = (brgemm.matmul(x, params["wi"], params["bi"],
+                          out_dtype=jnp.float32, backend=backend)
+            ).transpose(0, 2, 1)                       # (B,H,T)
+    logf = jax.nn.log_sigmoid(
+        brgemm.matmul(x, params["wf"], params["bf"], out_dtype=jnp.float32,
+                      backend=backend)).transpose(0, 2, 1)
+
+    if t == 1 and state is not None:
+        hv, state = mlstm_step(
+            q[:, :, 0].astype(jnp.float32), k[:, :, 0].astype(jnp.float32),
+            v[:, :, 0].astype(jnp.float32), logi[:, :, 0], logf[:, :, 0],
+            state)
+        hv = hv[:, :, None]
+    else:
+        hv, state = mlstm_chunkwise(q, k, v, logi, logf, chunk=cfg.chunk,
+                                    state=state, unroll=cfg.unroll)
+
+    hv = norms.rmsnorm(params["head_norm"], hv.astype(x.dtype))
+    o = jax.nn.sigmoid(brgemm.matmul(x, params["wo"], backend=backend))
+    o = o.reshape(b, t, h, cfg.dv).transpose(0, 2, 1, 3)
+    y = (hv * o).transpose(0, 2, 1, 3).reshape(b, t, h * cfg.dv)
+    y = brgemm.matmul(y, params["w_out"], backend=backend)
+    return y, state
+
+
+# ==========================================================================
+# sLSTM
+# ==========================================================================
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMCfg:
+    d_model: int
+    n_heads: int
+
+    @property
+    def dh(self):
+        return self.d_model // self.n_heads
+
+
+def slstm_init(key, cfg: SLSTMCfg, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    d, h, dh = cfg.d_model, cfg.n_heads, cfg.dh
+    w = (jax.random.normal(ks[0], (d, 4 * d), jnp.float32)
+         * (1.0 / d) ** 0.5).astype(dtype)
+    r = (jax.random.normal(ks[1], (h, dh, 4 * dh), jnp.float32)
+         * (1.0 / dh) ** 0.5).astype(dtype)
+    b = jnp.zeros((4 * d,), jnp.float32)
+    # forget-gate bias positive
+    b = b.at[2 * d:3 * d].set(3.0)
+    return {"w": w, "r": r, "b": b.astype(dtype)}
+
+
+def slstm_apply(params, x, cfg: SLSTMCfg, *, state=None,
+                backend: str | None = None):
+    """x: (B, T, D) -> (y, state). Gate order: z, i, f, o."""
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.dh
+    x_part = brgemm.matmul(x, params["w"], out_dtype=jnp.float32,
+                           backend=backend)          # (B,T,4D)
+    bias = params["b"].astype(jnp.float32)
+    r_w = params["r"].astype(jnp.float32)
+
+    if state is None:
+        state = {
+            "h": jnp.zeros((b, d), jnp.float32),
+            "c": jnp.zeros((b, d), jnp.float32),
+            "n": jnp.ones((b, d), jnp.float32),
+            "m": jnp.full((b, d), _LOG_EPS, jnp.float32),
+        }
+
+    def step(carry, xp):
+        h_prev, c, n, m = carry
+        hh = h_prev.reshape(b, h_, dh)
+        rec = jnp.einsum("bhd,hde->bhe", hh, r_w).reshape(b, 4 * d)
+        pre = xp + rec + bias
+        z_t = jnp.tanh(pre[:, :d])
+        li = pre[:, d:2 * d]
+        lf = jax.nn.log_sigmoid(pre[:, 2 * d:3 * d])
+        o_t = jax.nn.sigmoid(pre[:, 3 * d:])
+        m_new = jnp.maximum(lf + m, li)
+        i_p = jnp.exp(li - m_new)
+        f_p = jnp.exp(lf + m - m_new)
+        c_new = f_p * c + i_p * z_t
+        n_new = f_p * n + i_p
+        h_new = o_t * c_new / jnp.maximum(n_new, jnp.exp(-m_new))
+        return (h_new, c_new, n_new, m_new), h_new
+
+    h_ = h
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    carry, hs = jax.lax.scan(step, carry, x_part.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(x.dtype)
+    new_state = dict(zip(("h", "c", "n", "m"), carry))
+    return y, new_state

@@ -1,0 +1,135 @@
+"""Uniform model API + input specs for every (arch x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no device allocation) for the entry point that each shape kind
+lowers: ``train_step`` for train shapes, ``prefill``/``decode_step`` for
+inference shapes.  ``make_batch`` materializes small concrete batches for
+smoke tests.
+
+Modality stubs (per assignment): [vlm] patch embeddings and [audio] frame
+embeddings enter as precomputed inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchCfg
+from repro.configs.shapes import ShapeCfg
+from repro.models import encdec, transformer
+
+
+def is_encdec(cfg: ArchCfg) -> bool:
+    return cfg.block == "encdec"
+
+
+def get_module(cfg: ArchCfg):
+    return encdec if is_encdec(cfg) else transformer
+
+
+def init_params(key, cfg: ArchCfg):
+    return get_module(cfg).init_params(key, cfg)
+
+
+def loss_fn(params, batch, cfg: ArchCfg, **kw):
+    return get_module(cfg).loss_fn(params, batch, cfg, **kw)
+
+
+def forward(params, batch, cfg: ArchCfg, **kw):
+    return get_module(cfg).forward(params, batch, cfg, **kw)
+
+
+def prefill(params, batch, cfg: ArchCfg, cache, **kw):
+    return get_module(cfg).prefill(params, batch, cfg, cache, **kw)
+
+
+def decode_step(params, tokens, cfg: ArchCfg, cache, pos, **kw):
+    return get_module(cfg).decode_step(params, tokens, cfg, cache, pos, **kw)
+
+
+# --------------------------------------------------------------------------
+# shape bookkeeping
+# --------------------------------------------------------------------------
+
+def encdec_src_len(cfg: ArchCfg, shape: ShapeCfg) -> int:
+    if shape.kind == "train":
+        return shape.seq_len // 2
+    return min(4096, shape.seq_len // 8)
+
+
+def token_len(cfg: ArchCfg, shape: ShapeCfg) -> int:
+    """Decoder-token length for the given shape (stub prefixes deducted)."""
+    if is_encdec(cfg):
+        if shape.kind == "train":
+            return shape.seq_len - encdec_src_len(cfg, shape)
+        if shape.kind == "prefill":
+            return shape.seq_len - encdec_src_len(cfg, shape)
+        return shape.seq_len
+    if cfg.n_patches and shape.kind in ("train", "prefill"):
+        return shape.seq_len - cfg.n_patches
+    return shape.seq_len
+
+
+def input_specs(cfg: ArchCfg, shape: ShapeCfg):
+    """ShapeDtypeStructs for the batch of the shape's entry point."""
+    b = shape.global_batch
+    dt = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    tl = token_len(cfg, shape)
+
+    if shape.kind in ("train",):
+        batch = {"tokens": jax.ShapeDtypeStruct((b, tl), i32),
+                 "labels": jax.ShapeDtypeStruct((b, tl), i32)}
+        if cfg.n_patches:
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), dt)
+        if is_encdec(cfg):
+            batch["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, encdec_src_len(cfg, shape), cfg.d_model), dt)
+        return batch
+
+    if shape.kind == "prefill":
+        batch = {"tokens": jax.ShapeDtypeStruct((b, tl), i32)}
+        if cfg.n_patches:
+            batch["patch_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_patches, cfg.d_model), dt)
+        if is_encdec(cfg):
+            batch["src_embeds"] = jax.ShapeDtypeStruct(
+                (b, encdec_src_len(cfg, shape), cfg.d_model), dt)
+        return batch
+
+    if shape.kind == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((b, 1), i32)}
+    raise ValueError(shape.kind)
+
+
+def cache_specs(cfg: ArchCfg, shape: ShapeCfg):
+    """Abstract cache tree for serve shapes (eval_shape: no allocation)."""
+    b = shape.global_batch
+
+    def build():
+        if is_encdec(cfg):
+            return encdec.init_cache(
+                cfg, b, shape.seq_len, encdec_src_len(cfg, shape))
+        return transformer.init_cache(cfg, b, shape.seq_len)
+
+    return jax.eval_shape(build)
+
+
+def params_specs(key, cfg: ArchCfg):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def make_batch(key, cfg: ArchCfg, shape: ShapeCfg):
+    """Concrete random batch (for smoke tests on reduced configs)."""
+    specs = input_specs(cfg, shape)
+    ks = jax.random.split(key, len(specs))
+    out = {}
+    for k_, (name, s) in zip(ks, sorted(specs.items())):
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(k_, s.shape, 0, cfg.vocab,
+                                           jnp.int32)
+        else:
+            out[name] = jax.random.normal(k_, s.shape, jnp.float32).astype(
+                s.dtype)
+    return out

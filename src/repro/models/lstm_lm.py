@@ -1,0 +1,52 @@
+"""GNMT-style stacked-LSTM language model (paper Sec. 4.2.1 workload).
+
+4 LSTM layers by default (the paper's 4-layer GNMT); every GEMM inside the
+cells is the batch-reduce building block (layers/lstm.py, Alg 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import brgemm
+from repro.layers import embeddings, lstm
+
+
+@dataclasses.dataclass(frozen=True)
+class LSTMLMCfg:
+    vocab: int = 1024
+    d_model: int = 256
+    n_layers: int = 4
+    dtype: str = "float32"
+
+
+def init_params(key, cfg: LSTMLMCfg):
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "embed": embeddings.init(ks[0], cfg.vocab, cfg.d_model, dtype=dt),
+        "layers": [lstm.init(ks[i + 1], cfg.d_model, cfg.d_model, dtype=dt)
+                   for i in range(cfg.n_layers)],
+    }
+
+
+def forward(params, tokens, cfg: LSTMLMCfg, *, backend=None):
+    """tokens: (B, T) -> logits (B, T, vocab)."""
+    x = embeddings.encode(params["embed"], tokens)   # (B, T, D)
+    h = x.transpose(1, 0, 2)                         # (T, B, D) for scan
+    for lp in params["layers"]:
+        out, _ = lstm.forward(lp, h, backend=backend)
+        h = h + out                                   # residual stack
+    h = h.transpose(1, 0, 2)
+    return embeddings.decode(params["embed"], h, backend=backend)
+
+
+def loss_fn(params, batch, cfg: LSTMLMCfg, *, backend=None):
+    logits = forward(params, batch["tokens"], cfg, backend=backend)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    loss = -ll.mean()
+    return loss, {"loss": loss}

@@ -1,0 +1,99 @@
+"""ResNet-50 (paper Sec. 4.2.2 workload) on the direct-conv primitive.
+
+Bottleneck blocks exactly as in Table 2; a ``width`` factor scales channel
+counts for CPU-sized smoke tests.  All convolutions route through the
+batch-reduce conv (kernels/conv2d).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers import conv as conv_layer
+from repro.layers import linear
+
+
+@dataclasses.dataclass(frozen=True)
+class ResNetCfg:
+    n_classes: int = 1000
+    width: int = 64               # 64 = full ResNet-50
+    stage_blocks: tuple = (3, 4, 6, 3)
+
+
+def _bn_init(c):
+    return {"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))}
+
+
+def _bn(params, x, eps=1e-5):
+    # inference-style norm over (N, H, W) — keeps the example dependency-free
+    mean = x.mean(axis=(0, 1, 2), keepdims=True)
+    var = x.var(axis=(0, 1, 2), keepdims=True)
+    xhat = (x - mean) * jax.lax.rsqrt(var + eps)
+    return xhat * params["scale"] + params["bias"]
+
+
+def _bottleneck_init(key, cin, cmid, cout, stride):
+    ks = jax.random.split(key, 4)
+    p = {
+        "conv1": conv_layer.init(ks[0], cin, cmid, 1, 1, use_bias=False),
+        "bn1": _bn_init(cmid),
+        "conv2": conv_layer.init(ks[1], cmid, cmid, 3, 3, use_bias=False),
+        "bn2": _bn_init(cmid),
+        "conv3": conv_layer.init(ks[2], cmid, cout, 1, 1, use_bias=False),
+        "bn3": _bn_init(cout),
+    }
+    if stride != 1 or cin != cout:
+        p["proj"] = conv_layer.init(ks[3], cin, cout, 1, 1, use_bias=False)
+        p["bn_proj"] = _bn_init(cout)
+    return p
+
+
+def _bottleneck(p, x, stride, backend):
+    h = jax.nn.relu(_bn(p["bn1"], conv_layer.apply(
+        p["conv1"], x, backend=backend)))
+    h = jax.nn.relu(_bn(p["bn2"], conv_layer.apply(
+        p["conv2"], h, stride=stride, padding=1, backend=backend)))
+    h = _bn(p["bn3"], conv_layer.apply(p["conv3"], h, backend=backend))
+    if "proj" in p:
+        x = _bn(p["bn_proj"], conv_layer.apply(
+            p["proj"], x, stride=stride, backend=backend))
+    return jax.nn.relu(x + h)
+
+
+def init_params(key, cfg: ResNetCfg):
+    w = cfg.width
+    ks = jax.random.split(key, 2 + sum(cfg.stage_blocks))
+    p = {"stem": conv_layer.init(ks[0], 3, w, 7, 7, use_bias=False),
+         "bn_stem": _bn_init(w), "stages": []}
+    cin = w
+    ki = 1
+    for si, n_blocks in enumerate(cfg.stage_blocks):
+        cmid = w * (2 ** si)
+        cout = cmid * 4
+        stage = []
+        for bi in range(n_blocks):
+            stride = 2 if (bi == 0 and si > 0) else 1  # static, not a param
+            stage.append(_bottleneck_init(ks[ki], cin, cmid, cout, stride))
+            cin = cout
+            ki += 1
+        p["stages"].append(stage)
+    p["head"] = linear.init(ks[ki], cin, cfg.n_classes)
+    return p
+
+
+def forward(params, x, cfg: ResNetCfg, *, backend=None):
+    """x: (N, H, W, 3) -> logits (N, n_classes)."""
+    h = conv_layer.apply(params["stem"], x, stride=2, padding=3,
+                         backend=backend)
+    h = jax.nn.relu(_bn(params["bn_stem"], h))
+    # 3x3 max pool stride 2
+    h = jax.lax.reduce_window(h, -jnp.inf, jax.lax.max, (1, 3, 3, 1),
+                              (1, 2, 2, 1), "SAME")
+    for si, stage in enumerate(params["stages"]):
+        for bi, block in enumerate(stage):
+            stride = 2 if (bi == 0 and si > 0) else 1
+            h = _bottleneck(block, h, stride, backend)
+    h = h.mean(axis=(1, 2))
+    return linear.apply(params["head"], h, backend=backend)

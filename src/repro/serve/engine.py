@@ -1,0 +1,74 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop.
+
+Tracks the absolute-position offset introduced by modality prefixes (VLM
+patches) and drives the jit-compiled prefill/decode_step entry points.  The
+decode loop is a host loop (one jit call per token), matching the
+decode_32k/long_500k shape semantics: one new token against a standing
+cache/state.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchCfg
+from repro.models import api, encdec, transformer
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_len: int
+    temperature: float = 0.0   # 0 => greedy
+    src_len: int = 0           # enc-dec encoder memory length
+
+
+class Engine:
+    def __init__(self, cfg: ArchCfg, params, scfg: ServeConfig, *,
+                 backend: str | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.backend = backend
+        self._prefill = jax.jit(
+            lambda p, b, c: api.prefill(p, b, cfg, c, backend=backend))
+        self._decode = jax.jit(
+            lambda p, t, c, pos: api.decode_step(p, t, cfg, c, pos,
+                                                 backend=backend))
+
+    def _init_cache(self, batch_size: int):
+        if api.is_encdec(self.cfg):
+            return encdec.init_cache(self.cfg, batch_size,
+                                     self.scfg.max_len, self.scfg.src_len)
+        return transformer.init_cache(self.cfg, batch_size,
+                                      self.scfg.max_len)
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
+
+    def generate(self, batch, *, n_tokens: int, key=None):
+        """batch: prefill inputs. Returns (B, n_tokens) generated ids."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        b = batch["tokens"].shape[0]
+        prompt_len = batch["tokens"].shape[1]
+        pos_off = (self.cfg.n_patches or 0) if not api.is_encdec(
+            self.cfg) else 0
+
+        cache = self._init_cache(b)
+        logits, cache = self._prefill(self.params, batch, cache)
+        out = []
+        tok = self._sample(logits, key)
+        out.append(tok)
+        pos = prompt_len + pos_off
+        for i in range(n_tokens - 1):
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, tok[:, None], cache,
+                                         jnp.int32(pos))
+            tok = self._sample(logits, sub)
+            out.append(tok)
+            pos += 1
+        return jnp.stack(out, axis=1)

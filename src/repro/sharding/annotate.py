@@ -1,0 +1,42 @@
+"""Activation sharding constraints, decoupled from model code.
+
+Models call ``constrain(x, kind)`` with a *logical* activation kind; the
+launcher installs an active rule set (mesh-aware) via ``use_rules``.  With no
+rules installed (unit tests, single device) it is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+
+_ACTIVE = contextvars.ContextVar("repro_sharding_rules", default=None)
+_MESH = contextvars.ContextVar("repro_sharding_mesh", default=None)
+
+
+@contextlib.contextmanager
+def use_rules(rules, mesh=None):
+    """rules: callable (x, kind) -> PartitionSpec | None."""
+    tok = _ACTIVE.set(rules)
+    tok_m = _MESH.set(mesh)
+    try:
+        yield
+    finally:
+        _ACTIVE.reset(tok)
+        _MESH.reset(tok_m)
+
+
+def current_mesh():
+    """Mesh installed by the launcher (None in single-device contexts)."""
+    return _MESH.get()
+
+
+def constrain(x, kind: str):
+    rules = _ACTIVE.get()
+    if rules is None:
+        return x
+    spec = rules(x, kind)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,210 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, path-based).
+
+Parameter rules (FSDP x TP):
+  * column-parallel weights (qkv/up/gate projections): last-2 dims ->
+    (fsdp, model): the out dim (heads / mlp hidden) shards on the tensor-
+    parallel axis, the in dim (embed) shards ZeRO-3-style on the DP axes,
+  * row-parallel weights (wo / w_down / w_out): (model, fsdp),
+  * embedding table (vocab, embed) -> (model, fsdp); LM head -> (fsdp, model),
+  * MoE expert stacks (E, D, F) -> expert dim on the model axis (EP),
+  * any extra leading dims (layer stacks / groups) are unsharded,
+  * every assignment checks divisibility and falls back to replication.
+
+Activation/cache rules are shape-kind based; when the global batch cannot
+cover the DP axes (long_500k: batch=1) the sequence dim takes the DP axes
+instead (sequence parallelism).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import dp_axes, dp_size, model_size
+
+# leaf names -> column-parallel (in, out) = (fsdp, model)
+_COL = {
+    "wq", "wk", "wv", "wq_a", "wq_b", "wkv_a", "wkv_b", "w_up", "w_gate",
+    "w_gelu", "w_rnn_in", "w_rgate", "w_igate", "wi", "wf", "w", "w1", "w2",
+    "wo_gate",
+}
+# leaf names -> row-parallel (in, out) = (model, fsdp)
+_ROW = {"wo", "w_down", "w_out"}
+_MOE_LEAVES = {"w_gate", "w_up", "w_down"}
+
+
+def _div(n: int, axes, mesh) -> bool:
+    if not axes:
+        return False
+    size = 1
+    for a in (axes if isinstance(axes, tuple) else (axes,)):
+        size *= mesh.shape[a]
+    return n % size == 0 and n >= size
+
+
+def _lead(ndim: int, trailing: tuple) -> P:
+    return P(*((None,) * (ndim - len(trailing)) + trailing))
+
+
+def _path_keys(path) -> list[str]:
+    keys = []
+    for p in path:
+        if hasattr(p, "key"):
+            keys.append(str(p.key))
+        elif hasattr(p, "idx"):
+            keys.append(f"#{p.idx}")
+        else:
+            keys.append(str(p))
+    return keys
+
+
+def param_spec(path, shape, mesh, fsdp_enabled: bool = True,
+               tp_enabled: bool = True) -> P:
+    if len(shape) == 0:
+        return P()
+    keys = _path_keys(path)
+    leaf = keys[-1] if keys else ""
+    fsdp = dp_axes(mesh) if fsdp_enabled else ()
+    model = "model" if tp_enabled and "model" in mesh.axis_names else None
+    fs = fsdp if _div(shape[-2] if len(shape) >= 2 else 0, fsdp, mesh) \
+        else None
+    mdl_last = model if model and _div(shape[-1], model, mesh) else None
+
+    in_moe = any(k == "moe" for k in keys)
+    if in_moe and leaf in _MOE_LEAVES and len(shape) >= 3:
+        if model and _div(shape[-3], model, mesh):
+            # EP: expert dim on the model axis, D ZeRO-sharded on fsdp
+            e_axis = model
+            if leaf == "w_down":   # (E, F, D)
+                d_fs = fsdp if _div(shape[-1], fsdp, mesh) else None
+                return _lead(len(shape), (e_axis, None, d_fs))
+            d_fs = fsdp if _div(shape[-2], fsdp, mesh) else None
+            return _lead(len(shape), (e_axis, d_fs, None))
+        # few-experts fallback (E % model != 0, e.g. grok's 8 experts on a
+        # 16-way model axis): TP the per-expert FFN dim instead
+        if leaf == "w_down":       # (E, F, D)
+            f_m = model if model and _div(shape[-2], model, mesh) else None
+            d_fs = fsdp if _div(shape[-1], fsdp, mesh) else None
+            return _lead(len(shape), (None, f_m, d_fs))
+        d_fs = fsdp if _div(shape[-2], fsdp, mesh) else None
+        f_m = model if model and _div(shape[-1], model, mesh) else None
+        return _lead(len(shape), (None, d_fs, f_m))
+
+    if leaf == "router" and len(shape) >= 2:
+        return _lead(len(shape), (fs, None))
+
+    if leaf == "table" and len(shape) >= 2:
+        v_m = model if model and _div(shape[-2], model, mesh) else None
+        e_fs = fsdp if _div(shape[-1], fsdp, mesh) else None
+        return _lead(len(shape), (v_m, e_fs))
+
+    if len(shape) >= 2 and leaf in _ROW:
+        m_in = model if model and _div(shape[-2], model, mesh) else None
+        o_fs = fsdp if _div(shape[-1], fsdp, mesh) else None
+        return _lead(len(shape), (m_in, o_fs))
+
+    if len(shape) >= 2 and (leaf in _COL or leaf == "r"):
+        return _lead(len(shape), (fs, mdl_last))
+
+    # 1-D leaves (biases, norm scales, lam): replicate
+    return P()
+
+
+def param_shardings(param_shapes, mesh, *, fsdp: bool = True,
+                    tp: bool = True):
+    """Tree of NamedSharding matching a tree of ShapeDtypeStruct/arrays.
+
+    fsdp=False replicates params over the dp axes (ZeRO-0); tp=False
+    replicates them over the model axis — both are the small-model calls.
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: NamedSharding(
+            mesh, param_spec(path, x.shape, mesh, fsdp, tp)),
+        param_shapes)
+
+
+# --------------------------------------------------------------------------
+# batch / cache / activation rules
+# --------------------------------------------------------------------------
+
+def batch_spec(shape, mesh) -> P:
+    """tokens/labels (B, S) or embeds (B, T, D)."""
+    fsdp = dp_axes(mesh)
+    if _div(shape[0], fsdp, mesh):
+        return _lead(len(shape), ()) if len(shape) == 0 else P(
+            fsdp, *([None] * (len(shape) - 1)))
+    # sequence parallelism fallback (long-context, tiny batch)
+    if len(shape) >= 2 and _div(shape[1], fsdp, mesh):
+        return P(None, fsdp, *([None] * (len(shape) - 2)))
+    return P(*([None] * len(shape)))
+
+
+def batch_shardings(batch_specs, mesh):
+    return jax.tree.map(
+        lambda x: NamedSharding(mesh, batch_spec(x.shape, mesh)),
+        batch_specs)
+
+
+def cache_spec(path, shape, mesh) -> P:
+    keys = _path_keys(path)
+    leaf = keys[-1] if keys else ""
+    fsdp = dp_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+
+    def bspec(b_dim_idx, rest: list):
+        b = fsdp if _div(shape[b_dim_idx], fsdp, mesh) else None
+        return _lead(len(shape), tuple([b] + rest))
+
+    if leaf in ("k", "v") and len(shape) >= 4:
+        h, s = shape[-3], shape[-2]
+        if model and _div(h, model, mesh):
+            return bspec(len(shape) - 4, [model, None, None])
+        if model and _div(s, model, mesh):
+            return bspec(len(shape) - 4, [None, model, None])
+        return bspec(len(shape) - 4, [None, None, None])
+    if leaf in ("c_kv", "k_rope") and len(shape) >= 3:
+        s = shape[-2]
+        s_ax = model if model and _div(s, model, mesh) else None
+        return bspec(len(shape) - 3, [s_ax, None])
+    if any(k == "mlstm" for k in keys) and len(shape) >= 4:
+        # (.., B, H, dk, dv): shard dk on model when possible
+        dk_ax = model if model and _div(shape[-2], model, mesh) else None
+        return bspec(len(shape) - 4, [None, dk_ax, None])
+    if leaf in ("h", "conv") or (len(shape) >= 2 and leaf in ("c", "n", "m")):
+        d_ax = model if model and _div(shape[-1], model, mesh) else None
+        return bspec(len(shape) - 2 if len(shape) >= 2 else 0,
+                     [d_ax] if len(shape) >= 2 else [])
+    # fallback: try batch on the first trailing-structure dim
+    return P(*([None] * len(shape)))
+
+
+def cache_shardings(cache_specs, mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, x: NamedSharding(mesh, cache_spec(path, x.shape, mesh)),
+        cache_specs)
+
+
+def activation_rules(mesh):
+    """Callable for repro.sharding.annotate.use_rules."""
+    fsdp = dp_axes(mesh)
+    model = "model" if "model" in mesh.axis_names else None
+
+    def rules(x, kind: str):
+        if x.ndim < 2:
+            return None
+        if kind == "moe_dispatch" and x.ndim == 4:
+            # (G, E, cap, D): groups on DP, experts on model when divisible
+            g_ax = fsdp if _div(x.shape[0], fsdp, mesh) else None
+            e_ax = model if model and _div(x.shape[1], model, mesh) else None
+            return P(g_ax, e_ax, None, None)
+        b, s = x.shape[0], x.shape[1]
+        if _div(b, fsdp, mesh):
+            lead = (fsdp, None)
+        elif _div(s, fsdp, mesh):
+            lead = (None, fsdp)
+        else:
+            lead = (None, None)
+        if kind == "logits" and model and _div(x.shape[-1], model, mesh):
+            return P(*lead, *([None] * (x.ndim - 3)), model)
+        return P(*lead, *([None] * (x.ndim - 2)))
+
+    return rules

@@ -1,0 +1,75 @@
+"""The jit-able train step: loss -> grads -> (optional compression /
+accumulation) -> AdamW update.
+
+Mixed precision: the fp32 master copy lives in the optimizer state; the
+compute-dtype (usually bf16) working params are re-cast from it every step
+(cheap, sharded).  Microbatch gradient accumulation loops with ``lax.scan``
+so compute overlaps the reduce-scatter XLA schedules across microbatches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchCfg
+from repro.models import api
+from repro.train import optimizer as opt
+from repro.train.schedule import warmup_cosine
+from repro.distributed.collectives import compress_grads, decompress_grads
+
+
+def make_train_step(cfg: ArchCfg, ocfg: opt.AdamWCfg, *,
+                    microbatches: int = 1, grad_compression: str = "none",
+                    backend: str | None = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_of(params, batch):
+        return api.loss_fn(params, batch, cfg, backend=backend)
+
+    def train_step(state, batch):
+        params = opt.cast_params(state["opt"], cfg.dtype)
+
+        if microbatches > 1:
+            def micro(acc, mb):
+                (_, metrics), grads = jax.value_and_grad(
+                    loss_of, has_aux=True)(params, mb)
+                acc = jax.tree.map(jnp.add, acc, grads)
+                return acc, metrics
+
+            split = jax.tree.map(
+                lambda x: x.reshape((microbatches,
+                                     x.shape[0] // microbatches)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, metrics = jax.lax.scan(micro, zeros, split)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            metrics = jax.tree.map(lambda m: m[-1], metrics)
+        else:
+            (_, metrics), grads = jax.value_and_grad(
+                loss_of, has_aux=True)(params, batch)
+
+        if grad_compression != "none":
+            grads, scales = compress_grads(grads, kind=grad_compression)
+            grads = decompress_grads(grads, scales, kind=grad_compression)
+
+        lr_scale = warmup_cosine(state["opt"]["step"])
+        new_opt, opt_metrics = opt.adamw_update(grads, state["opt"], ocfg,
+                                                lr_scale)
+        metrics = {**metrics, **opt_metrics}
+        return {"opt": new_opt}, metrics
+
+    return train_step
+
+
+def init_state(key, cfg: ArchCfg, ocfg: opt.AdamWCfg):
+    params = api.init_params(key, cfg)
+    return {"opt": opt.adamw_init(params, ocfg)}
+
+
+def abstract_state(cfg: ArchCfg, ocfg: opt.AdamWCfg):
+    """ShapeDtypeStruct state tree (dry-run: no allocation)."""
+    return jax.eval_shape(
+        functools.partial(init_state, jax.random.PRNGKey(0), cfg, ocfg))

@@ -1,0 +1,71 @@
+"""Hypothesis property tests on the batch-reduce GEMM invariants."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.brgemm import brgemm, matmul
+
+_dims = st.integers(min_value=1, max_value=48)
+_batch = st.integers(min_value=1, max_value=5)
+
+
+def _arr(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@settings(max_examples=25, deadline=None)
+@given(nb=_batch, m=_dims, k=_dims, n=_dims, seed=st.integers(0, 2**31 - 1))
+def test_batch_split_associativity(nb, m, k, n, seed):
+    """sum_i A_i B_i == brgemm(first half) + brgemm(second half).
+
+    This is the invariant that makes the kernel's grid-order free: the
+    reduction over the block batch can be split at any point.
+    """
+    rng = np.random.default_rng(seed)
+    a, b = _arr(rng, nb, m, k), _arr(rng, nb, k, n)
+    whole = brgemm(a, b, backend="pallas")
+    if nb == 1:
+        np.testing.assert_allclose(
+            np.asarray(whole),
+            np.asarray(brgemm(a[:1], b[:1], backend="pallas")),
+            rtol=1e-4, atol=1e-4)
+        return
+    s = nb // 2
+    first = brgemm(a[:s], b[:s], backend="pallas")
+    both = brgemm(a[s:], b[s:], c0=first, beta=1.0, backend="pallas")
+    np.testing.assert_allclose(np.asarray(whole), np.asarray(both),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=_dims, k=_dims, n=_dims, seed=st.integers(0, 2**31 - 1),
+       alpha=st.floats(-2, 2, allow_nan=False), beta=st.floats(-2, 2))
+def test_alpha_beta_linearity(m, k, n, seed, alpha, beta):
+    rng = np.random.default_rng(seed)
+    x, w, c0 = _arr(rng, m, k), _arr(rng, k, n), _arr(rng, m, n)
+    got = matmul(x, w, c0=c0, alpha=alpha, beta=beta, backend="pallas")
+    want = alpha * np.asarray(x) @ np.asarray(w) + beta * np.asarray(c0)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=20, deadline=None)
+@given(nb=_batch, m=_dims, k=_dims, n=_dims, seed=st.integers(0, 2**31 - 1))
+def test_brgemm_reduction_is_permutation_invariant(nb, m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = _arr(rng, nb, m, k), _arr(rng, nb, k, n)
+    perm = rng.permutation(nb)
+    y1 = brgemm(a, b, backend="pallas")
+    y2 = brgemm(a[perm], b[perm], backend="pallas")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=_dims, k=_dims, n=_dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_pallas_equals_xla_path(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _arr(rng, m, k), _arr(rng, k, n)
+    np.testing.assert_allclose(
+        np.asarray(matmul(x, w, backend="pallas")),
+        np.asarray(matmul(x, w, backend="xla")),
+        rtol=1e-4, atol=1e-4)

@@ -1,0 +1,210 @@
+"""Model-zoo layer tests: attention modes, MoE invariants, recurrent cells."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attention import flash_attention
+from repro.layers import attention as attn
+from repro.layers import moe
+from repro.layers import recurrent as rec
+from repro.layers.attention import AttnCfg
+from repro.layers.moe import MoECfg
+
+
+# ------------------------------ attention -------------------------------
+
+def test_gqa_prefill_decode_parity():
+    cfg = AttnCfg(d_model=64, n_heads=8, n_kv_heads=2)
+    p = attn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64)) * 0.5
+    y_full = attn.apply(p, x, cfg, mode="train")
+    cache = attn.init_cache(cfg, 2, 16)
+    y_pre, cache = attn.apply(p, x[:, :8], cfg, mode="prefill", cache=cache)
+    np.testing.assert_allclose(np.asarray(y_full[:, :8]), np.asarray(y_pre),
+                               rtol=2e-4, atol=2e-4)
+    for i in range(8, 12):
+        y_i, cache = attn.apply(p, x[:, i:i + 1], cfg, mode="decode",
+                                cache=cache, pos=i)
+        np.testing.assert_allclose(np.asarray(y_full[:, i]),
+                                   np.asarray(y_i[:, 0]), rtol=2e-4,
+                                   atol=2e-4)
+
+
+def test_mla_compressed_cache_decode_parity():
+    cfg = AttnCfg(d_model=64, n_heads=4, n_kv_heads=4, mla=True,
+                  q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                  qk_rope_dim=8, v_head_dim=16)
+    p = attn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64)) * 0.5
+    y_full = attn.apply(p, x, cfg, mode="train")
+    cache = attn.init_cache(cfg, 2, 16)
+    assert set(cache) == {"c_kv", "k_rope"}  # compressed, not per-head K/V
+    y_pre, cache = attn.apply(p, x[:, :8], cfg, mode="prefill", cache=cache)
+    np.testing.assert_allclose(np.asarray(y_full[:, :8]), np.asarray(y_pre),
+                               rtol=1e-3, atol=1e-3)
+    for i in range(8, 12):
+        y_i, cache = attn.apply(p, x[:, i:i + 1], cfg, mode="decode",
+                                cache=cache, pos=i)
+        np.testing.assert_allclose(np.asarray(y_full[:, i]),
+                                   np.asarray(y_i[:, 0]), rtol=1e-3,
+                                   atol=1e-3)
+
+
+def test_sliding_window_masks_old_positions():
+    cfg = AttnCfg(d_model=32, n_heads=2, n_kv_heads=2, window=4)
+    p = attn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 32))
+    y = attn.apply(p, x, cfg, mode="train")
+    # perturbing a token > window positions back must not change output
+    x2 = x.at[:, 2].add(10.0)
+    y2 = attn.apply(p, x2, cfg, mode="train")
+    np.testing.assert_allclose(np.asarray(y[:, 10:]), np.asarray(y2[:, 10:]),
+                               rtol=1e-4, atol=1e-4)
+    assert not np.allclose(np.asarray(y[:, 3]), np.asarray(y2[:, 3]))
+
+
+def test_flash_attention_causality():
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 2, 32, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 32, 16))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 2, 32, 16))
+    y = flash_attention(q, k, v, causal=True, backend="pallas")
+    k2 = k.at[:, :, -1].add(100.0)
+    v2 = v.at[:, :, -1].add(100.0)
+    y2 = flash_attention(q, k2, v2, causal=True, backend="pallas")
+    # only the last query position may change
+    np.testing.assert_allclose(np.asarray(y[:, :, :-1]),
+                               np.asarray(y2[:, :, :-1]), rtol=1e-4,
+                               atol=1e-4)
+
+
+# -------------------------------- MoE ------------------------------------
+
+def test_moe_top1_equals_dense_expert():
+    """With 1 expert and top-1, MoE == plain (gated) MLP of that expert."""
+    cfg = MoECfg(d_model=16, d_ff=32, n_experts=1, top_k=1,
+                 capacity_factor=4.0, renormalize=True)
+    p = moe.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    y, aux = moe.apply(p, x, cfg)
+    from repro.kernels.brgemm import matmul
+    xf = x.reshape(-1, 16)
+    g = np.asarray(matmul(xf, p["w_gate"][0], activation="silu"))
+    u = np.asarray(matmul(xf, p["w_up"][0]))
+    want = np.asarray(matmul(jnp.asarray(g * u), p["w_down"][0]))
+    np.testing.assert_allclose(np.asarray(y.reshape(-1, 16)), want,
+                               rtol=1e-4, atol=1e-4)
+    assert float(aux["dropped_fraction"]) == 0.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_moe_gates_sum_to_one(seed):
+    cfg = MoECfg(d_model=16, d_ff=16, n_experts=8, top_k=2,
+                 capacity_factor=8.0)
+    p = moe.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 2**31), (1, 16, 16))
+    y, aux = moe.apply(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux["dropped_fraction"]) == 0.0  # dropless capacity
+
+
+def test_moe_capacity_dropping_reported():
+    cfg = MoECfg(d_model=8, d_ff=8, n_experts=4, top_k=2,
+                 capacity_factor=0.25)
+    p = moe.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 8))
+    _, aux = moe.apply(p, x, cfg)
+    assert float(aux["dropped_fraction"]) > 0.0
+
+
+# ------------------------------ recurrent --------------------------------
+
+def test_mlstm_chunkwise_matches_scan_oracle():
+    b, h, t, dk, dv = 2, 2, 64, 16, 16
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, h, t, dk)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, h, t, dk)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, h, t, dv)), jnp.float32)
+    li = jnp.asarray(rng.normal(size=(b, h, t)), jnp.float32)
+    lf = jnp.asarray(np.log(1 / (1 + np.exp(-rng.normal(size=(b, h, t))))),
+                     jnp.float32)
+    hs_scan, st_scan = rec.mlstm_scan(q, k, v, li, lf)
+    for chunk in (8, 16, 64):
+        hs_ck, st_ck = rec.mlstm_chunkwise(q, k, v, li, lf, chunk=chunk)
+        np.testing.assert_allclose(np.asarray(hs_scan), np.asarray(hs_ck),
+                                   rtol=3e-4, atol=3e-4)
+    for a, b_ in zip(st_scan, st_ck):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_),
+                                   rtol=3e-3, atol=3e-3)
+
+
+def test_rglru_state_decay_bounds():
+    """RG-LRU recurrence weight a in (0, 1): state cannot blow up."""
+    cfg = rec.RGLRUCfg(d_model=16, d_rnn=16)
+    p = rec.rglru_init(jax.random.PRNGKey(0), cfg)
+    x = jnp.ones((1, 256, 16))
+    y, state = rec.rglru_apply(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.abs(np.asarray(state["h"])).max() < 1e3
+
+
+def test_slstm_long_sequence_stable():
+    cfg = rec.SLSTMCfg(d_model=16, n_heads=2)
+    p = rec.slstm_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 512, 16)) * 3.0
+    y, state = rec.slstm_apply(p, x, cfg)
+    assert np.isfinite(np.asarray(y)).all()
+    assert np.isfinite(np.asarray(state["c"])).all()
+
+
+# --------------------- §Perf optimization paths --------------------------
+
+def test_chunked_attention_matches_naive():
+    """Online-softmax (flash-semantics) XLA path == naive oracle."""
+    from repro.kernels.flash_attention.ref import mha_chunked
+    rng = np.random.default_rng(3)
+    for (b, hq, hkv, tq, tk, causal, win) in [
+            (2, 4, 2, 64, 64, True, None),
+            (1, 4, 1, 96, 96, True, 32),
+            (1, 2, 2, 32, 80, False, None)]:
+        q = jnp.asarray(rng.normal(size=(b, hq, tq, 16)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, hkv, tk, 16)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, hkv, tk, 16)), jnp.float32)
+        a = flash_attention(q, k, v, causal=causal, window=win,
+                            backend="xla", xla_impl="naive")
+        c = flash_attention(q, k, v, causal=causal, window=win,
+                            backend="xla", xla_impl="chunked")
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_moe_grouped_matches_ungrouped_dropless():
+    """Grouped (per-batch-row) dispatch == global dispatch when no tokens
+    drop — the §Perf iteration-1 change is semantics-preserving."""
+    import dataclasses
+    cfg_g = MoECfg(d_model=24, d_ff=32, n_experts=4, top_k=2,
+                   capacity_factor=4.0, grouped=True)
+    cfg_u = dataclasses.replace(cfg_g, grouped=False)
+    p = moe.init(jax.random.PRNGKey(5), cfg_g)
+    x = jax.random.normal(jax.random.PRNGKey(6), (4, 12, 24))
+    yg, ag = moe.apply(p, x, cfg_g)
+    yu, au = moe.apply(p, x, cfg_u)
+    np.testing.assert_allclose(np.asarray(yg), np.asarray(yu),
+                               rtol=1e-4, atol=1e-4)
+    assert float(ag["dropped_fraction"]) == 0.0
+
+
+def test_moe_grouped_grads_finite():
+    cfg = MoECfg(d_model=16, d_ff=16, n_experts=4, top_k=2,
+                 capacity_factor=2.0, grouped=True)
+    p = moe.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16))
+
+    def loss(p):
+        y, aux = moe.apply(p, x, cfg)
+        return y.sum() + aux["load_balance_loss"]
+
+    g = jax.grad(loss)(p)
+    assert all(np.isfinite(np.asarray(v)).all() for v in jax.tree.leaves(g))
