@@ -11,6 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from benchmarks.common import RESNET50_LAYERS, conv_flops, emit, timeit
 from repro.kernels.conv2d import conv2d
 
@@ -22,6 +23,11 @@ REPEATS = {1: 1, 2: 1, 3: 3, 4: 3, 5: 3, 6: 1, 7: 1, 8: 4, 9: 4, 10: 4,
 
 
 def run():
+    with repro.use(backend="xla"):
+        _run()
+
+
+def _run():
     rng = np.random.default_rng(0)
     weighted_fl, weighted_t = 0.0, 0.0
     for (lid, c, k, h, w_, r, s, st) in RESNET50_LAYERS:
@@ -30,16 +36,15 @@ def run():
         pad = r // 2
         fl = conv_flops(N, c, k, h, w_, r, s, st)
 
-        fwd = jax.jit(lambda x, w: conv2d(x, w, stride=st, padding=pad,
-                                          backend="xla"))
+        fwd = jax.jit(lambda x, w: conv2d(x, w, stride=st, padding=pad))
         us = timeit(fwd, x, wt, iters=3)
         emit(f"fig7_rn50_fwd_layer{lid}", us, f"{fl / us / 1e3:.1f}GFLOPs")
         weighted_fl += REPEATS[lid] * fl
         weighted_t += REPEATS[lid] * us
 
         bwd = jax.jit(jax.grad(
-            lambda x, w: (conv2d(x, w, stride=st, padding=pad,
-                                 backend="xla") ** 2).sum(), argnums=(0, 1)))
+            lambda x, w: (conv2d(x, w, stride=st, padding=pad) ** 2).sum(),
+            argnums=(0, 1)))
         us_b = timeit(bwd, x, wt, iters=3)
         emit(f"fig8_rn50_bwdupd_layer{lid}", us_b,
              f"{2 * fl / us_b / 1e3:.1f}GFLOPs")

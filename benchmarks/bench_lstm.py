@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import repro
 from benchmarks.common import emit, timeit
 from repro.layers import lstm
 
@@ -23,18 +24,23 @@ def lstm_flops(c, k, n, t):
 
 
 def run():
+    with repro.use(backend="xla"):
+        _run()
+
+
+def _run():
     for ck in SIZES:
         p = lstm.init(jax.random.PRNGKey(0), ck, ck)
         x = jnp.asarray(np.random.default_rng(0).normal(size=(T, N, ck)),
                         jnp.float32)
 
-        fwd = jax.jit(lambda p, x: lstm.forward(p, x, backend="xla")[0])
+        fwd = jax.jit(lambda p, x: lstm.forward(p, x)[0])
         us = timeit(fwd, p, x, iters=3)
         fl = lstm_flops(ck, ck, N, T)
         emit(f"fig6_lstm_fwd_C{ck}", us, f"{fl / us / 1e3:.1f}GFLOPs")
 
         bwd = jax.jit(jax.grad(
-            lambda p, x: (lstm.forward(p, x, backend="xla")[0] ** 2).sum()))
+            lambda p, x: (lstm.forward(p, x)[0] ** 2).sum()))
         us = timeit(bwd, p, x, iters=3)
         emit(f"fig6_lstm_bwdupd_C{ck}", us,
              f"{3 * fl / us / 1e3:.1f}GFLOPs")

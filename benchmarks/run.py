@@ -10,24 +10,34 @@ Prints ``name,us_per_call,derived`` CSV lines.  Mapping to the paper:
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--backend", default=None, choices=("xla", "pallas"),
+                    help="force a dispatch backend for every benchmark "
+                         "(overridden by per-benchmark explicit choices)")
+    args = ap.parse_args()
+
+    import repro
     from benchmarks import (bench_brgemm, bench_conv_resnet50,
                             bench_conv_strategies, bench_distributed_proxy,
                             bench_fc, bench_lstm)
     print("name,us_per_call,derived")
     ok = True
-    for mod in (bench_brgemm, bench_conv_strategies, bench_lstm,
-                bench_fc, bench_conv_resnet50, bench_distributed_proxy):
-        try:
-            mod.run()
-        except Exception:
-            ok = False
-            print(f"# ERROR in {mod.__name__}", file=sys.stderr)
-            traceback.print_exc()
+    # use(backend=None) leaves every field unset — a no-op context.
+    with repro.use(backend=args.backend):
+        for mod in (bench_brgemm, bench_conv_strategies, bench_lstm,
+                    bench_fc, bench_conv_resnet50, bench_distributed_proxy):
+            try:
+                mod.run()
+            except Exception:
+                ok = False
+                print(f"# ERROR in {mod.__name__}", file=sys.stderr)
+                traceback.print_exc()
     if not ok:
         sys.exit(1)
 

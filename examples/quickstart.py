@@ -12,6 +12,7 @@ import tempfile
 
 sys.path.insert(0, str(pathlib.Path(__file__).parents[1] / "src"))
 
+import repro                                                 # noqa: E402
 from repro import configs                                    # noqa: E402
 from repro.configs.shapes import ShapeCfg                    # noqa: E402
 from repro.launch.mesh import make_mesh                      # noqa: E402
@@ -22,7 +23,10 @@ def main():
     cfg = configs.get("smollm-135m").reduced()
     shape = ShapeCfg("quickstart", "train", seq_len=64, global_batch=8)
     mesh = make_mesh((1, 1), ("data", "model"))
-    with tempfile.TemporaryDirectory() as ckpt_dir:
+    # The execution context scopes backend selection for everything below
+    # (on CPU this resolves to the XLA reference path anyway; on TPU it
+    # forces it — handy for A/B'ing against the Pallas kernels).
+    with repro.use(backend="xla"), tempfile.TemporaryDirectory() as ckpt_dir:
         _, losses = run(cfg, shape, mesh=mesh, steps=10, ckpt_dir=ckpt_dir,
                         save_every=5, log_every=2)
         print(f"\ntrained 10 steps: loss {losses[0]:.3f} -> {losses[-1]:.3f}")

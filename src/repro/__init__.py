@@ -1,2 +1,20 @@
-"""repro: batch-reduce GEMM as the single DL building block, on TPU/JAX."""
-__version__ = "1.0.0"
+"""repro: batch-reduce GEMM as the single DL building block, on TPU/JAX.
+
+Execution configuration (backend, block policy, accumulation dtype,
+interpret mode) scopes through the context API:
+
+    import repro
+    with repro.use(backend="xla"):
+        ...  # every primitive in here routes to the XLA reference path
+"""
+from repro.core.dispatch import (  # noqa: F401
+    ExecutionContext,
+    available_backends,
+    backends_for,
+    current_context,
+    registered_ops,
+    resolve,
+    use,
+)
+
+__version__ = "1.1.0"

@@ -1,1 +1,2 @@
-"""Core: the batch-reduce GEMM public API, blocking heuristics, epilogues."""
+"""Core: the batch-reduce GEMM public API, unified backend dispatch
+(op registry + execution context), blocking heuristics, and epilogues."""

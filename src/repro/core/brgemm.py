@@ -2,14 +2,15 @@
 
 Every matmul in this framework routes through this module — layers never
 call ``jnp.dot`` directly for their compute hot-spots.  See
-``repro.kernels.brgemm`` for the Pallas kernel, the XLA-path reference, and
-the backend-dispatch rules.
+``repro.kernels.brgemm`` for the Pallas kernel and the XLA-path reference,
+and ``repro.core.dispatch`` for the backend registry, the ``repro.use``
+execution context, and the resolution precedence.
 """
 from repro.kernels.brgemm import (  # noqa: F401
     batched_matmul,
     brgemm,
     matmul,
-    resolve_backend,
-    set_default_backend,
+    resolve_backend,      # deprecated shim
+    set_default_backend,  # deprecated shim
 )
 from repro.core.blocking import Blocks, choose_blocks  # noqa: F401

@@ -1,0 +1,359 @@
+"""Unified building-block dispatch: op registry + execution context.
+
+The paper's thesis is that every DL primitive reduces to one building block
+(the batch-reduce GEMM); the library around it degenerates to tuning of
+loops around this sole kernel.  This module is the API expression of that
+consolidation: every primitive op (``matmul``, ``brgemm``,
+``batched_matmul``, ``conv2d``, ``flash_attention``) registers named
+backend implementations here, and every knob that used to be hand-threaded
+(backend selection, interpret mode, block geometry, accumulation dtype)
+resolves through one ``ExecutionContext``.
+
+Backend resolution precedence (first set wins):
+
+  1. explicit ``backend=`` call argument        (never falls back)
+  2. innermost active ``use(backend=...)`` context
+     (the deprecated ``set_default_backend`` global acts as the outermost
+     context entry, preserving its legacy override-beats-env behavior)
+  3. the ``REPRO_BACKEND`` env var (legacy alias: ``REPRO_BRGEMM_BACKEND``)
+  4. hardware default: ``pallas`` on TPU, ``xla`` elsewhere
+
+A backend chosen by tiers 2-4 that is unavailable on the current platform
+(per its capability predicate) falls back deterministically to the highest
+priority available backend for that op.  An explicitly requested backend
+(tier 1) never falls back: it raises instead, so tests and benchmarks fail
+loudly rather than silently measuring the wrong path.
+
+Block selection routes through a memoized, shape-keyed tuning cache keyed
+``(op, backend, m, n, k, dtype, policy)`` so a future autotuner drops in
+via :func:`register_block_policy` without touching any call site.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import os
+import threading
+import warnings
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.blocking import Blocks, choose_blocks
+
+ENV_VAR = "REPRO_BACKEND"
+LEGACY_ENV_VAR = "REPRO_BRGEMM_BACKEND"
+
+
+# --------------------------------------------------------------------------
+# op registry
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BackendImpl:
+    op: str
+    name: str
+    fn: Callable
+    available: Callable[[], bool]
+    priority: int  # fallback order: higher first
+
+
+_REGISTRY: dict[str, dict[str, BackendImpl]] = {}
+_KERNELS_IMPORTED = False
+_REGISTER_LOCK = threading.RLock()  # reentrant: the import re-enters dispatch
+
+
+def _ensure_registered() -> None:
+    """Import the kernel packages so their ops modules self-register.
+
+    Marked done only after a *successful* import, so a failed first import
+    (broken dep, interrupt) is retried rather than leaving the registry
+    permanently empty; the lock keeps concurrent first-resolvers from
+    observing a partially-populated registry.
+    """
+    global _KERNELS_IMPORTED
+    if _KERNELS_IMPORTED:
+        return
+    with _REGISTER_LOCK:
+        if _KERNELS_IMPORTED:
+            return
+        import repro.kernels  # noqa: F401
+        _KERNELS_IMPORTED = True
+
+
+def pallas_available() -> bool:
+    """The Pallas TPU kernels compile on TPU and interpret on CPU."""
+    return jax.default_backend() in ("tpu", "cpu")
+
+
+def register(op: str, backend: str, fn: Callable | None = None, *,
+             available: Callable[[], bool] | None = None,
+             priority: int = 0):
+    """Register ``fn`` as the ``backend`` implementation of ``op``.
+
+    Usable directly or as a decorator.  ``available`` is a zero-arg
+    capability predicate evaluated at resolution time (platform checks);
+    ``priority`` orders the deterministic fallback (higher first).
+    """
+    def deco(f):
+        _REGISTRY.setdefault(op, {})[backend] = BackendImpl(
+            op=op, name=backend, fn=f,
+            available=available or (lambda: True), priority=priority)
+        return f
+    return deco if fn is None else deco(fn)
+
+
+def registered_ops() -> tuple[str, ...]:
+    _ensure_registered()
+    return tuple(sorted(_REGISTRY))
+
+
+def backends_for(op: str) -> tuple[str, ...]:
+    """All registered backend names for ``op`` (available or not)."""
+    return tuple(sorted(_impls(op)))
+
+
+def available_backends(op: str) -> tuple[str, ...]:
+    """Backend names for ``op`` whose capability predicate holds now."""
+    return tuple(sorted(n for n, b in _impls(op).items() if b.available()))
+
+
+def _impls(op: str) -> dict[str, BackendImpl]:
+    _ensure_registered()
+    impls = _REGISTRY.get(op)
+    if not impls:
+        known = ", ".join(sorted(_REGISTRY)) or "<none>"
+        raise ValueError(f"unknown op {op!r}; registered ops: {known}")
+    return impls
+
+
+def _known_backend_names() -> set[str]:
+    _ensure_registered()
+    return {n for impls in _REGISTRY.values() for n in impls}
+
+
+def _check_backend_name(name: str) -> None:
+    known = _known_backend_names()
+    if name not in known:
+        raise ValueError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{', '.join(sorted(known))}")
+
+
+# --------------------------------------------------------------------------
+# execution context
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExecutionContext:
+    """One frame of execution configuration; ``None`` fields are unset and
+    inherit from the enclosing frame (or the env/hardware default)."""
+    backend: str | None = None
+    blocks_policy: str | Callable | None = None
+    accum_dtype: Any = None
+    interpret: bool | None = None
+
+
+_STACK: contextvars.ContextVar[tuple[ExecutionContext, ...]] = \
+    contextvars.ContextVar("repro_dispatch_stack", default=())
+
+# Backing store for the deprecated ``set_default_backend`` shim.  Treated
+# as the outermost context frame: any ``use`` context overrides it, and it
+# overrides the env var — exactly the old brgemm-only global's precedence.
+_DEPRECATED_GLOBAL_BACKEND: str | None = None
+
+
+@contextlib.contextmanager
+def use(*, backend: str | None = None,
+        blocks_policy: str | Callable | None = None,
+        accum_dtype=None, interpret: bool | None = None):
+    """Scope execution configuration: ``with repro.use(backend="xla"): ...``
+
+    Only the fields passed are set; everything else inherits from the
+    enclosing context.  Nesting composes (innermost set field wins) and the
+    previous state is restored on exit, including on exceptions.
+
+    Note: a jit-compiled function captures whatever the context resolves to
+    at *trace* time; entering a different context later does not retrace
+    already-compiled code.
+    """
+    if backend is not None:
+        _check_backend_name(backend)
+    if (blocks_policy is not None and not callable(blocks_policy)
+            and blocks_policy not in BLOCK_POLICIES):
+        raise ValueError(
+            f"unknown blocks_policy {blocks_policy!r}; registered policies: "
+            f"{', '.join(sorted(BLOCK_POLICIES))} (or pass a callable)")
+    ctx = ExecutionContext(backend=backend, blocks_policy=blocks_policy,
+                           accum_dtype=accum_dtype, interpret=interpret)
+    token = _STACK.set(_STACK.get() + (ctx,))
+    try:
+        yield ctx
+    finally:
+        _STACK.reset(token)
+
+
+def current_context() -> ExecutionContext:
+    """The merged view of the active context stack (innermost wins)."""
+    backend = _DEPRECATED_GLOBAL_BACKEND
+    blocks_policy = accum_dtype = interpret = None
+    for ctx in _STACK.get():
+        backend = ctx.backend if ctx.backend is not None else backend
+        blocks_policy = (ctx.blocks_policy if ctx.blocks_policy is not None
+                         else blocks_policy)
+        accum_dtype = (ctx.accum_dtype if ctx.accum_dtype is not None
+                       else accum_dtype)
+        interpret = ctx.interpret if ctx.interpret is not None else interpret
+    return ExecutionContext(backend=backend, blocks_policy=blocks_policy,
+                            accum_dtype=accum_dtype, interpret=interpret)
+
+
+# --------------------------------------------------------------------------
+# resolution
+# --------------------------------------------------------------------------
+
+def _hardware_default() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _env_backend() -> str | None:
+    return os.environ.get(ENV_VAR) or os.environ.get(LEGACY_ENV_VAR) or None
+
+
+def resolve(op: str, backend: str | None = None) -> str:
+    """Resolve the backend name for ``op`` under the precedence order."""
+    impls = _impls(op)
+    explicit = backend is not None
+    name = (backend or current_context().backend or _env_backend()
+            or _hardware_default())
+    if name not in impls:
+        raise ValueError(
+            f"unknown backend {name!r} for op {op!r}; registered backends: "
+            f"{', '.join(sorted(impls))}")
+    if impls[name].available():
+        return name
+    if explicit:
+        raise RuntimeError(
+            f"backend {name!r} for op {op!r} is not available on platform "
+            f"{jax.default_backend()!r} (explicitly requested, so not "
+            f"falling back; available: {', '.join(available_backends(op))})")
+    for cand in sorted(impls.values(), key=lambda b: (-b.priority, b.name)):
+        if cand.available():
+            return cand.name
+    raise RuntimeError(
+        f"no available backend for op {op!r} on platform "
+        f"{jax.default_backend()!r}; registered: "
+        f"{', '.join(sorted(impls))}")
+
+
+def get_impl(op: str, backend: str | None = None) -> Callable:
+    """Resolve and return the implementation callable for ``op``."""
+    return _impls(op)[resolve(op, backend)].fn
+
+
+def call(op: str, *args, backend: str | None = None, **kwargs):
+    """One-shot dispatch: resolve ``op`` and invoke its implementation."""
+    return get_impl(op, backend)(*args, **kwargs)
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Pallas interpret mode: call arg > context > (not on TPU)."""
+    if interpret is not None:
+        return bool(interpret)
+    ctx = current_context().interpret
+    if ctx is not None:
+        return bool(ctx)
+    return jax.default_backend() != "tpu"
+
+
+def resolve_accum_dtype(accum_dtype=None):
+    """Accumulation dtype for the GEMM family: call arg > context > fp32."""
+    if accum_dtype is not None:
+        return jnp.dtype(accum_dtype)
+    ctx = current_context().accum_dtype
+    return jnp.dtype(ctx) if ctx is not None else jnp.dtype(jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# shape-keyed block tuning cache
+# --------------------------------------------------------------------------
+
+BLOCK_POLICIES: dict[str, Callable] = {}
+_TUNING_CACHE: dict[tuple, Blocks] = {}
+_TUNING_LOCK = threading.Lock()
+
+
+def register_block_policy(name: str, fn: Callable) -> None:
+    """Register a block-selection policy.
+
+    ``fn(op, m, n, k, dtype, backend) -> Blocks``.  Results are memoized in
+    the tuning cache, so an expensive search-based autotuner pays its cost
+    once per (op, shape, dtype, backend).
+    """
+    BLOCK_POLICIES[name] = fn
+
+
+register_block_policy(
+    "heuristic", lambda op, m, n, k, dtype, backend: choose_blocks(
+        m, n, k, dtype))
+
+
+def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
+                   blocks: Blocks | None = None) -> Blocks:
+    """Block geometry for a GEMM-shaped op: call arg > context policy.
+
+    Policy results are memoized keyed (op, backend, shapes, dtype, policy);
+    an explicit ``blocks`` argument bypasses the cache entirely.
+    """
+    if blocks is not None:
+        return blocks
+    policy = current_context().blocks_policy or "heuristic"
+    if callable(policy):
+        # keyed on the callable itself so ad-hoc autotuners are memoized
+        # too (a fresh lambda per call site gets a fresh entry)
+        policy_fn, policy_key = policy, policy
+    else:
+        policy_fn, policy_key = BLOCK_POLICIES[policy], policy
+    key = (op, backend, int(m), int(n), int(k), jnp.dtype(dtype).name,
+           policy_key)
+    hit = _TUNING_CACHE.get(key)
+    if hit is None:
+        hit = policy_fn(op, m, n, k, dtype, backend)
+        with _TUNING_LOCK:
+            _TUNING_CACHE[key] = hit
+    return hit
+
+
+def tuning_cache_info() -> dict[tuple, Blocks]:
+    return dict(_TUNING_CACHE)
+
+
+def clear_tuning_cache() -> None:
+    _TUNING_CACHE.clear()
+
+
+# --------------------------------------------------------------------------
+# deprecated shims (pre-dispatch API)
+# --------------------------------------------------------------------------
+
+def set_default_backend(name: str | None) -> None:
+    """Deprecated: use ``with repro.use(backend=...)`` instead."""
+    warnings.warn(
+        "set_default_backend is deprecated; use "
+        "`with repro.use(backend=...)` instead",
+        DeprecationWarning, stacklevel=2)
+    if name is not None:
+        _check_backend_name(name)
+    global _DEPRECATED_GLOBAL_BACKEND
+    _DEPRECATED_GLOBAL_BACKEND = name
+
+
+def resolve_backend(backend: str | None = None, op: str = "brgemm") -> str:
+    """Deprecated: use ``repro.core.dispatch.resolve(op, backend)``."""
+    warnings.warn(
+        "resolve_backend is deprecated; use "
+        "repro.core.dispatch.resolve(op, backend) instead",
+        DeprecationWarning, stacklevel=2)
+    return resolve(op, backend)

@@ -1,0 +1,13 @@
+"""Compatibility aliases for the Pallas TPU API across jax releases."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across releases; take
+# whichever this jax provides, and fail loudly at import time (not with a
+# cryptic NoneType error inside pallas_call) if neither exists.
+CompilerParams = getattr(pltpu, "CompilerParams",
+                         getattr(pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover - future jax incompatibility
+    raise ImportError(
+        "this jax release exposes neither pallas.tpu.CompilerParams nor "
+        "pallas.tpu.TPUCompilerParams; update repro.core.pallas_compat "
+        "for the new name")

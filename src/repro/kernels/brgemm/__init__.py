@@ -2,6 +2,6 @@ from repro.kernels.brgemm.ops import (  # noqa: F401
     batched_matmul,
     brgemm,
     matmul,
-    resolve_backend,
-    set_default_backend,
+    resolve_backend,      # deprecated shim (see repro.core.dispatch)
+    set_default_backend,  # deprecated shim (see repro.core.dispatch)
 )

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import pallas_compat as _pc
 from repro.core import fusion
 from repro.core.blocking import Blocks, choose_blocks, round_up
 
@@ -58,6 +59,7 @@ def _make_body(
     activation: str,
     out_dtype,
     block_rank3: bool,
+    acc_dtype=jnp.float32,
 ):
     """Build the kernel body. Ref order: a, b, [c0], [bias], out, acc."""
 
@@ -86,7 +88,7 @@ def _make_body(
         if block_rank3:  # leading singleton batch-block dim
             a = a[0]
             b = b[0]
-        acc_ref[...] += jnp.dot(a, b, preferred_element_type=jnp.float32)
+        acc_ref[...] += jnp.dot(a, b, preferred_element_type=acc_dtype)
 
         @pl.when(r == nr - 1)
         def _finish():
@@ -110,6 +112,7 @@ def _make_body(
     jax.jit,
     static_argnames=(
         "activation", "alpha", "beta", "out_dtype", "blocks", "interpret",
+        "acc_dtype",
     ),
 )
 def matmul_pallas(
@@ -124,6 +127,7 @@ def matmul_pallas(
     out_dtype=None,
     blocks: Blocks | None = None,
     interpret: bool = False,
+    acc_dtype=jnp.float32,
 ):
     """C = act(alpha * X @ W + beta * C0 + bias); X: (m,k), W: (k,n).
 
@@ -161,7 +165,7 @@ def matmul_pallas(
     body = _make_body(
         reduce_axis=2, has_c0=has_c0, has_bias=has_bias, alpha=alpha,
         beta=beta, activation=activation, out_dtype=out_dtype,
-        block_rank3=False,
+        block_rank3=False, acc_dtype=acc_dtype,
     )
     out = pl.pallas_call(
         body,
@@ -169,8 +173,8 @@ def matmul_pallas(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, r: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        compiler_params=_pc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -182,6 +186,7 @@ def matmul_pallas(
     jax.jit,
     static_argnames=(
         "activation", "alpha", "beta", "out_dtype", "blocks", "interpret",
+        "acc_dtype",
     ),
 )
 def brgemm_stacked_pallas(
@@ -196,6 +201,7 @@ def brgemm_stacked_pallas(
     out_dtype=None,
     blocks: Blocks | None = None,
     interpret: bool = False,
+    acc_dtype=jnp.float32,
 ):
     """Paper's literal interface: C = act(alpha * sum_i A_i@B_i + beta*C0 + bias).
 
@@ -232,7 +238,7 @@ def brgemm_stacked_pallas(
     body = _make_body(
         reduce_axis=2, has_c0=has_c0, has_bias=has_bias, alpha=alpha,
         beta=beta, activation=activation, out_dtype=out_dtype,
-        block_rank3=True,
+        block_rank3=True, acc_dtype=acc_dtype,
     )
     out = pl.pallas_call(
         body,
@@ -240,8 +246,8 @@ def brgemm_stacked_pallas(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, r: (i, j)),
         out_shape=jax.ShapeDtypeStruct((ap.shape[1], bp.shape[2]), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        compiler_params=_pc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
@@ -251,7 +257,8 @@ def brgemm_stacked_pallas(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("activation", "alpha", "out_dtype", "blocks", "interpret"),
+    static_argnames=("activation", "alpha", "out_dtype", "blocks", "interpret",
+                     "acc_dtype"),
 )
 def batched_matmul_pallas(
     a,
@@ -263,6 +270,7 @@ def batched_matmul_pallas(
     out_dtype=None,
     blocks: Blocks | None = None,
     interpret: bool = False,
+    acc_dtype=jnp.float32,
 ):
     """Strided-batched GEMM baseline; broadcast either operand zero-copy.
 
@@ -326,7 +334,7 @@ def batched_matmul_pallas(
 
         av = a_ref[...] if a_ref.ndim == 2 else a_ref[0]
         bv = b_ref[...] if b_ref.ndim == 2 else b_ref[0]
-        acc_ref[...] += jnp.dot(av, bv, preferred_element_type=jnp.float32)
+        acc_ref[...] += jnp.dot(av, bv, preferred_element_type=acc_dtype)
 
         @pl.when(r == nr - 1)
         def _():
@@ -341,8 +349,8 @@ def batched_matmul_pallas(
         in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bm, bn), lambda bi, i, j, r: (bi, i, j)),
         out_shape=jax.ShapeDtypeStruct((nb, mp, np_), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        compiler_params=_pc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,6 +1,8 @@
 """Public, differentiable entry points for the batch-reduce GEMM kernel.
 
-Backend dispatch:
+Backend dispatch goes through ``repro.core.dispatch``: each primitive
+(``matmul``, ``brgemm``, ``batched_matmul``) registers two backends,
+
   * ``pallas``  — the Pallas TPU kernel (kernel.py). On CPU it runs in
     interpret mode (Python evaluation of the kernel body) for correctness
     validation; on TPU it compiles via Mosaic.
@@ -8,6 +10,12 @@ Backend dispatch:
     (fp32 accumulation, identical epilogues). This path is used for the
     512-device dry-run and CPU-scale smoke tests, where interpreting a
     Python kernel under a production mesh is meaningless.
+
+and the ``backend=`` kwarg is the explicit-call-argument tier of the
+dispatch precedence (call arg > context > env > hardware default).  Block
+geometry and interpret mode resolve through the active
+``repro.use(...)`` context; block selection is memoized in the dispatch
+tuning cache keyed (op, backend, shapes, dtype, policy).
 
 The custom VJP expresses the backward passes through the *same* building
 block, mirroring the paper's claim that fwd/bwd/upd all reduce to
@@ -18,39 +26,19 @@ batch-reduce GEMM calls:
 from __future__ import annotations
 
 import functools
-import os
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import fusion
+from repro.core import dispatch, fusion
 from repro.core.blocking import Blocks
+from repro.core.dispatch import (  # noqa: F401  (deprecated shims, re-exported)
+    resolve_backend,
+    set_default_backend,
+)
 from repro.kernels.brgemm import kernel as K
 from repro.kernels.brgemm import ref as R
-
-_BACKEND_OVERRIDE: str | None = None
-
-
-def set_default_backend(name: str | None) -> None:
-    global _BACKEND_OVERRIDE
-    assert name in (None, "xla", "pallas"), name
-    _BACKEND_OVERRIDE = name
-
-
-def resolve_backend(backend: str | None = None) -> str:
-    if backend is not None:
-        return backend
-    if _BACKEND_OVERRIDE is not None:
-        return _BACKEND_OVERRIDE
-    env = os.environ.get("REPRO_BRGEMM_BACKEND")
-    if env:
-        return env
-    return "pallas" if jax.default_backend() == "tpu" else "xla"
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 class _Cfg(NamedTuple):
@@ -60,6 +48,16 @@ class _Cfg(NamedTuple):
     out_dtype: object
     blocks: Blocks | None
     interpret: bool
+    acc_dtype: object
+
+
+def _make_cfg(op, m, n, k, dtype, activation, alpha, beta, out_dtype,
+              blocks) -> _Cfg:
+    """Resolve context-dependent knobs (trace-time) into a hashable config."""
+    blk = dispatch.resolve_blocks(op, m, n, k, dtype, backend="pallas",
+                                  blocks=blocks)
+    return _Cfg(activation, float(alpha), float(beta), out_dtype, blk,
+                dispatch.resolve_interpret(), dispatch.resolve_accum_dtype())
 
 
 # --------------------------------------------------------------------------
@@ -72,6 +70,7 @@ def _matmul_p(cfg: _Cfg, x, w, bias, c0):
         x, w, bias, c0,
         activation=cfg.activation, alpha=cfg.alpha, beta=cfg.beta,
         out_dtype=cfg.out_dtype, blocks=cfg.blocks, interpret=cfg.interpret,
+        acc_dtype=cfg.acc_dtype,
     )
 
 
@@ -113,6 +112,26 @@ def _matmul_bwd(cfg, res, dy):
 _matmul_p.defvjp(_matmul_fwd, _matmul_bwd)
 
 
+@dispatch.register("matmul", "pallas", available=dispatch.pallas_available,
+                   priority=10)
+def _matmul_pallas_backend(x, w, bias, c0, *, activation, alpha, beta,
+                           out_dtype, blocks):
+    m, k = x.shape
+    n = w.shape[-1]
+    cfg = _make_cfg("matmul", m, n, k, x.dtype, activation, alpha, beta,
+                    out_dtype, blocks)
+    return _matmul_p(cfg, x, w, bias, c0)
+
+
+@dispatch.register("matmul", "xla")
+def _matmul_xla_backend(x, w, bias, c0, *, activation, alpha, beta,
+                        out_dtype, blocks):
+    del blocks  # tiling is an XLA-internal decision on this path
+    return R.matmul_ref(
+        x, w, bias, activation=activation, alpha=alpha, beta=beta, c0=c0,
+        out_dtype=out_dtype, acc_dtype=dispatch.resolve_accum_dtype())
+
+
 def matmul(
     x,
     w,
@@ -130,15 +149,9 @@ def matmul(
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     c02 = c0.reshape(-1, c0.shape[-1]) if c0 is not None else None
-    be = resolve_backend(backend)
-    if be == "xla":
-        y = R.matmul_ref(
-            x2, w, bias, activation=activation, alpha=alpha, beta=beta,
-            c0=c02, out_dtype=out_dtype)
-    else:
-        cfg = _Cfg(activation, float(alpha), float(beta), out_dtype, blocks,
-                   _interpret())
-        y = _matmul_p(cfg, x2, w, bias, c02)
+    impl = dispatch.get_impl("matmul", backend)
+    y = impl(x2, w, bias, c02, activation=activation, alpha=alpha,
+             beta=beta, out_dtype=out_dtype, blocks=blocks)
     return y.reshape(*lead, w.shape[-1])
 
 
@@ -152,6 +165,7 @@ def _brgemm_p(cfg: _Cfg, a, b, bias, c0):
         a, b, c0, bias,
         activation=cfg.activation, alpha=cfg.alpha, beta=cfg.beta,
         out_dtype=cfg.out_dtype, blocks=cfg.blocks, interpret=cfg.interpret,
+        acc_dtype=cfg.acc_dtype,
     )
 
 
@@ -188,6 +202,26 @@ def _brgemm_bwd(cfg, res, dy):
 _brgemm_p.defvjp(_brgemm_fwd, _brgemm_bwd)
 
 
+@dispatch.register("brgemm", "pallas", available=dispatch.pallas_available,
+                   priority=10)
+def _brgemm_pallas_backend(a, b, bias, c0, *, activation, alpha, beta,
+                           out_dtype, blocks):
+    _, m, k = a.shape
+    n = b.shape[-1]
+    cfg = _make_cfg("brgemm", m, n, k, a.dtype, activation, alpha, beta,
+                    out_dtype, blocks)
+    return _brgemm_p(cfg, a, b, bias, c0)
+
+
+@dispatch.register("brgemm", "xla")
+def _brgemm_xla_backend(a, b, bias, c0, *, activation, alpha, beta,
+                        out_dtype, blocks):
+    del blocks
+    return R.brgemm_ref(
+        a, b, c0, bias, activation=activation, alpha=alpha, beta=beta,
+        out_dtype=out_dtype, acc_dtype=dispatch.resolve_accum_dtype())
+
+
 def brgemm(
     a,
     b,
@@ -202,14 +236,37 @@ def brgemm(
     blocks: Blocks | None = None,
 ):
     """The paper's batch-reduce GEMM. a: (B, m, k), b: (B, k, n) -> (m, n)."""
-    be = resolve_backend(backend)
-    if be == "xla":
-        return R.brgemm_ref(
-            a, b, c0, bias, activation=activation, alpha=alpha, beta=beta,
-            out_dtype=out_dtype)
-    cfg = _Cfg(activation, float(alpha), float(beta), out_dtype, blocks,
-               _interpret())
-    return _brgemm_p(cfg, a, b, bias, c0)
+    impl = dispatch.get_impl("brgemm", backend)
+    return impl(a, b, bias, c0, activation=activation, alpha=alpha,
+                beta=beta, out_dtype=out_dtype, blocks=blocks)
+
+
+# --------------------------------------------------------------------------
+# batched_matmul: C_i = act(alpha * A_i @ B_i + bias)   (baseline, no reduce)
+# --------------------------------------------------------------------------
+
+@dispatch.register("batched_matmul", "pallas",
+                   available=dispatch.pallas_available, priority=10)
+def _batched_matmul_pallas_backend(a, b, bias, *, activation, alpha,
+                                   out_dtype, blocks):
+    m, k = a.shape[-2:]
+    n = b.shape[-1]
+    blk = dispatch.resolve_blocks("batched_matmul", m, n, k, a.dtype,
+                                  backend="pallas", blocks=blocks)
+    return K.batched_matmul_pallas(
+        a, b, bias, activation=activation, alpha=float(alpha),
+        out_dtype=out_dtype, blocks=blk,
+        interpret=dispatch.resolve_interpret(),
+        acc_dtype=dispatch.resolve_accum_dtype())
+
+
+@dispatch.register("batched_matmul", "xla")
+def _batched_matmul_xla_backend(a, b, bias, *, activation, alpha, out_dtype,
+                                blocks):
+    del blocks
+    return R.batched_matmul_ref(
+        a, b, bias, activation=activation, alpha=alpha, out_dtype=out_dtype,
+        acc_dtype=dispatch.resolve_accum_dtype())
 
 
 def batched_matmul(
@@ -224,11 +281,6 @@ def batched_matmul(
     blocks: Blocks | None = None,
 ):
     """Strided-batched GEMM baseline (no cross-batch reduction)."""
-    be = resolve_backend(backend)
-    if be == "xla":
-        return R.batched_matmul_ref(
-            a, b, bias, activation=activation, alpha=alpha,
-            out_dtype=out_dtype)
-    return K.batched_matmul_pallas(
-        a, b, bias, activation=activation, alpha=float(alpha),
-        out_dtype=out_dtype, blocks=blocks, interpret=_interpret())
+    impl = dispatch.get_impl("batched_matmul", backend)
+    return impl(a, b, bias, activation=activation, alpha=alpha,
+                out_dtype=out_dtype, blocks=blocks)

@@ -32,11 +32,12 @@ def brgemm_ref(
     beta: float = 0.0,
     activation: str = "none",
     out_dtype=None,
+    acc_dtype=jnp.float32,
 ):
     """Stacked-blocks batch-reduce GEMM. a: (B, m, k), b: (B, k, n)."""
     out_dtype = out_dtype or a.dtype
     acc = jnp.einsum(
-        "imk,ikn->mn", a, b, preferred_element_type=jnp.float32
+        "imk,ikn->mn", a, b, preferred_element_type=acc_dtype
     )
     return _finish(acc, c0, bias, alpha, beta, activation, out_dtype)
 
@@ -51,10 +52,11 @@ def matmul_ref(
     beta: float = 0.0,
     c0=None,
     out_dtype=None,
+    acc_dtype=jnp.float32,
 ):
     """Plain GEMM viewed as a batch-reduce over K blocks. x: (m,k), w: (k,n)."""
     out_dtype = out_dtype or x.dtype
-    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    acc = jnp.dot(x, w, preferred_element_type=acc_dtype)
     return _finish(acc, c0, bias, alpha, beta, activation, out_dtype)
 
 
@@ -66,6 +68,7 @@ def batched_matmul_ref(
     activation: str = "none",
     alpha: float = 1.0,
     out_dtype=None,
+    acc_dtype=jnp.float32,
 ):
     """Strided-batched GEMM (the *baseline* the paper compares against).
 
@@ -74,11 +77,11 @@ def batched_matmul_ref(
     """
     out_dtype = out_dtype or a.dtype
     if a.ndim == 2:
-        acc = jnp.einsum("mk,ikn->imn", a, b, preferred_element_type=jnp.float32)
+        acc = jnp.einsum("mk,ikn->imn", a, b, preferred_element_type=acc_dtype)
     elif b.ndim == 2:
-        acc = jnp.einsum("imk,kn->imn", a, b, preferred_element_type=jnp.float32)
+        acc = jnp.einsum("imk,kn->imn", a, b, preferred_element_type=acc_dtype)
     else:
-        acc = jnp.einsum("imk,ikn->imn", a, b, preferred_element_type=jnp.float32)
+        acc = jnp.einsum("imk,ikn->imn", a, b, preferred_element_type=acc_dtype)
     acc = acc * jnp.float32(alpha)
     if bias is not None:
         acc = acc + bias.astype(jnp.float32)

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import pallas_compat as _pc
 from repro.core import fusion
 from repro.core.blocking import round_up
 
@@ -148,7 +149,7 @@ def conv2d_pallas(
             (1, 1, bq, bk), lambda ni, kbi, oj, oib, rsc: (ni, oj, oib, kbi)),
         out_shape=jax.ShapeDtypeStruct((n, p, qp, kp), out_dtype),
         scratch_shapes=[pltpu.VMEM((bq, bk), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_pc.CompilerParams(
             dimension_semantics=(
                 "parallel", "parallel", "parallel", "parallel", "arbitrary"),
         ),

@@ -18,7 +18,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import fusion
+from repro.core import dispatch, fusion
 from repro.kernels.brgemm import kernel as BK
 from repro.kernels.conv2d import ref as R
 from repro.kernels.conv2d.kernel import conv2d_pallas
@@ -110,6 +110,23 @@ def _conv_bwd(cfg, res, dy):
 _conv_p.defvjp(_conv_fwd, _conv_bwd)
 
 
+@dispatch.register("conv2d", "pallas", available=dispatch.pallas_available,
+                   priority=10)
+def _conv2d_pallas_backend(x, w, bias, *, stride, padding, activation,
+                           out_dtype):
+    cfg = _Cfg(stride, padding, activation, out_dtype,
+               dispatch.resolve_interpret())
+    return _conv_p(cfg, x, w, bias)
+
+
+@dispatch.register("conv2d", "xla")
+def _conv2d_xla_backend(x, w, bias, *, stride, padding, activation,
+                        out_dtype):
+    return R.conv2d_ref(
+        x, w, bias, stride=stride, padding=padding, activation=activation,
+        out_dtype=out_dtype)
+
+
 def conv2d(
     x,
     w,
@@ -122,12 +139,6 @@ def conv2d(
     backend: str | None = None,
 ):
     """Direct convolution via batch-reduce GEMM. NHWC x RSCK -> NHWC."""
-    from repro.kernels.brgemm.ops import resolve_backend, _interpret
-
-    be = resolve_backend(backend)
-    if be == "xla":
-        return R.conv2d_ref(
-            x, w, bias, stride=stride, padding=padding,
-            activation=activation, out_dtype=out_dtype)
-    cfg = _Cfg(stride, padding, activation, out_dtype, _interpret())
-    return _conv_p(cfg, x, w, bias)
+    impl = dispatch.get_impl("conv2d", backend)
+    return impl(x, w, bias, stride=stride, padding=padding,
+                activation=activation, out_dtype=out_dtype)

@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import pallas_compat as _pc
 from repro.core.blocking import round_up
 
 NEG_INF = -1e30
@@ -137,7 +138,7 @@ def flash_attention_pallas(
             pltpu.VMEM((bq, STATS_LANES), jnp.float32),
             pltpu.VMEM((bq, STATS_LANES), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_pc.CompilerParams(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

@@ -14,7 +14,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.brgemm.ops import resolve_backend, _interpret
+from repro.core import dispatch
 from repro.kernels.flash_attention import ref as R
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
@@ -51,17 +51,34 @@ def _flash_bwd(cfg, res, dy):
 _flash_p.defvjp(_flash_fwd, _flash_bwd)
 
 
+@dispatch.register("flash_attention", "pallas",
+                   available=dispatch.pallas_available, priority=10)
+def _flash_pallas_backend(q, k, v, *, causal, window, scale, xla_impl,
+                          unroll):
+    del xla_impl, unroll  # XLA-path-only knobs
+    cfg = _Cfg(causal, window, scale, dispatch.resolve_interpret())
+    return _flash_p(cfg, q, k, v)
+
+
+@dispatch.register("flash_attention", "xla")
+def _flash_xla_backend(q, k, v, *, causal, window, scale, xla_impl, unroll):
+    if xla_impl == "chunked":
+        return R.mha_chunked(q, k, v, causal=causal, window=window,
+                             scale=scale, unroll=unroll)
+    return R.mha_ref(q, k, v, causal=causal, window=window, scale=scale)
+
+
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: int | None = None, scale: float | None = None,
                     backend: str | None = None, xla_impl: str = "naive",
                     unroll: bool = False):
     """xla_impl: 'naive' (full T^2 softmax) or 'chunked' (online softmax,
     flash semantics — the XLA-path memory optimization)."""
-    be = resolve_backend(backend)
-    if be == "xla":
-        if xla_impl == "chunked":
-            return R.mha_chunked(q, k, v, causal=causal, window=window,
-                                 scale=scale, unroll=unroll)
-        return R.mha_ref(q, k, v, causal=causal, window=window, scale=scale)
-    cfg = _Cfg(causal, window, scale, _interpret())
-    return _flash_p(cfg, q, k, v)
+    # Validated here, not in the xla impl: a typo'd value must fail the
+    # same way whichever backend dispatch resolves to.
+    if xla_impl not in ("naive", "chunked"):
+        raise ValueError(
+            f"unknown xla_impl {xla_impl!r}; expected 'naive' or 'chunked'")
+    impl = dispatch.get_impl("flash_attention", backend)
+    return impl(q, k, v, causal=causal, window=window, scale=scale,
+                xla_impl=xla_impl, unroll=unroll)

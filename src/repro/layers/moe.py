@@ -15,7 +15,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import brgemm
+from repro.core import brgemm, dispatch
 from repro.layers import mlp as mlp_layer
 from repro.sharding.annotate import constrain
 
@@ -154,7 +154,7 @@ def apply(params, x, cfg: MoECfg, *, backend: str | None = None):
     # (§Perf iteration 1b).  On the Pallas path this is vmap-over-groups of
     # the batched brgemm; the XLA path writes the same contraction directly.
     def expert_gemm(lhs, w, activation="none"):
-        if brgemm.resolve_backend(backend) == "xla":
+        if dispatch.resolve("batched_matmul", backend) == "xla":
             out = jnp.einsum("gecd,edf->gecf", lhs, w,
                              preferred_element_type=jnp.float32)
             from repro.core import fusion

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchCfg
+from repro.core import dispatch
 from repro.models import api, encdec, transformer
 
 
@@ -31,11 +32,20 @@ class Engine:
         self.params = params
         self.scfg = scfg
         self.backend = backend
-        self._prefill = jax.jit(
-            lambda p, b, c: api.prefill(p, b, cfg, c, backend=backend))
-        self._decode = jax.jit(
-            lambda p, t, c, pos: api.decode_step(p, t, cfg, c, pos,
-                                                 backend=backend))
+
+        # Backend selection scopes through the execution context; it is
+        # captured at trace time, so each jit entry point re-enters the
+        # engine's context when it traces.
+        def _prefill(p, b, c):
+            with dispatch.use(backend=self.backend):
+                return api.prefill(p, b, cfg, c)
+
+        def _decode(p, t, c, pos):
+            with dispatch.use(backend=self.backend):
+                return api.decode_step(p, t, cfg, c, pos)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
 
     def _init_cache(self, batch_size: int):
         if api.is_encdec(self.cfg):

@@ -14,6 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchCfg
+from repro.core import dispatch
 from repro.models import api
 from repro.train import optimizer as opt
 from repro.train.schedule import warmup_cosine
@@ -26,7 +27,10 @@ def make_train_step(cfg: ArchCfg, ocfg: opt.AdamWCfg, *,
     """Returns train_step(state, batch) -> (state, metrics)."""
 
     def loss_of(params, batch):
-        return api.loss_fn(params, batch, cfg, backend=backend)
+        # Backend selection scopes through the execution context (captured
+        # when the surrounding jit traces).
+        with dispatch.use(backend=backend):
+            return api.loss_fn(params, batch, cfg)
 
     def train_step(state, batch):
         params = opt.cast_params(state["opt"], cfg.dtype)

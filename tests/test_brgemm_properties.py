@@ -1,6 +1,9 @@
 """Hypothesis property tests on the batch-reduce GEMM invariants."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: install via `pip install -e ".[test]"`
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels.brgemm import brgemm, matmul

@@ -3,7 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_testlib import given, settings, st  # optional-hypothesis shim
 
 from repro.kernels.flash_attention import flash_attention
 from repro.layers import attention as attn

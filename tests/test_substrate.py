@@ -6,7 +6,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from hypothesis_testlib import given, settings, st  # optional-hypothesis shim
 
 from repro import configs
 from repro.checkpoint.manager import CheckpointManager
