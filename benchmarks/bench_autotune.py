@@ -1,0 +1,45 @@
+"""Heuristic vs measured-autotune block selection, per op family.
+
+For each op's canonical tuning triple this times the Pallas kernel (the
+autotuner's own proxy problem) twice — once with the static heuristic tile,
+once with the tile the measured search picked — and emits both rows plus
+the relative delta.  This is the PolyDL claim made measurable: the
+remaining performance lives in the loop tiling around the one kernel.
+
+Opt-in via ``run.py --compare-policies`` (the search itself costs a
+compile-and-run per candidate, so it is not part of the default sweep).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.core import autotune, blocking, dispatch
+
+CASES = [
+    # (op, canonical (m, n, k)) — one representative shape per family
+    ("matmul", (256, 256, 256)),
+    ("conv2d", (28, 128, 128)),          # ResNet-50 28x28 layer row
+    ("flash_attention", (128, 128, 64)),
+]
+
+
+def _fmt(blocks) -> str:
+    return "blocks=" + "x".join(str(v) for v in blocks.astuple())
+
+
+def run():
+    interpret = dispatch.resolve_interpret()
+    for op, (m, n, k) in CASES:
+        heur = blocking.default_blocks(op, m, n, k, jnp.float32)
+        with dispatch.use(blocks_policy="autotune"):
+            tuned = dispatch.resolve_blocks(op, m, n, k, jnp.float32,
+                                            backend="pallas")
+        us_h = timeit(autotune.proxy_runner(op, m, n, k, jnp.float32,
+                                            heur, interpret))
+        us_t = timeit(autotune.proxy_runner(op, m, n, k, jnp.float32,
+                                            tuned, interpret))
+        delta = (us_h - us_t) / us_h * 100.0
+        emit(f"tune_{op}_{m}x{n}x{k}_heuristic", us_h, _fmt(heur))
+        emit(f"tune_{op}_{m}x{n}x{k}_autotune", us_t,
+             f"{_fmt(tuned)};delta={delta:+.1f}%")

@@ -20,7 +20,14 @@ def timeit(fn, *args, iters: int = 5, warmup: int = 2):
     return times[len(times) // 2] * 1e6
 
 
+# Every emit() also lands here so run.py --json can persist the full
+# trajectory (BENCH_*.json) without re-parsing its own stdout.
+RECORDS: list[dict] = []
+
+
 def emit(name: str, us: float, derived: str):
+    RECORDS.append({"name": name, "us_per_call": round(us, 1),
+                    "derived": derived})
     print(f"{name},{us:.1f},{derived}", flush=True)
 
 

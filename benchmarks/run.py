@@ -7,10 +7,16 @@ Prints ``name,us_per_call,derived`` CSV lines.  Mapping to the paper:
   fig7/8_* Figures 7-8 + Table 2: ResNet-50 convolutions
   fig9_*   Figure 9  fully-connected layers
   fig10_*  Figure 10 distributed-scaling proxy (collective footprint)
+  tune_*   heuristic vs measured-autotune tiles (``--compare-policies``)
+
+``--json out.json`` additionally persists every record (plus platform /
+dispatch metadata) so the BENCH_*.json perf trajectory can be diffed
+across commits.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -20,24 +26,53 @@ def main() -> None:
     ap.add_argument("--backend", default=None, choices=("xla", "pallas"),
                     help="force a dispatch backend for every benchmark "
                          "(overridden by per-benchmark explicit choices)")
+    ap.add_argument("--blocks-policy", default=None,
+                    choices=("heuristic", "autotune"),
+                    help="block-selection policy for every benchmark")
+    ap.add_argument("--json", default=None, metavar="OUT",
+                    help="also write all records as JSON to this path")
+    ap.add_argument("--compare-policies", action="store_true",
+                    help="run the heuristic-vs-autotune tile comparison "
+                         "(pays a measured search per op/shape)")
     args = ap.parse_args()
 
+    import jax
+
     import repro
-    from benchmarks import (bench_brgemm, bench_conv_resnet50,
-                            bench_conv_strategies, bench_distributed_proxy,
-                            bench_fc, bench_lstm)
+    from benchmarks import (bench_autotune, bench_brgemm,
+                            bench_conv_resnet50, bench_conv_strategies,
+                            bench_distributed_proxy, bench_fc, bench_lstm,
+                            common)
+
+    mods = [bench_brgemm, bench_conv_strategies, bench_lstm, bench_fc,
+            bench_conv_resnet50, bench_distributed_proxy]
+    if args.compare_policies:
+        mods.append(bench_autotune)
+
     print("name,us_per_call,derived")
     ok = True
-    # use(backend=None) leaves every field unset — a no-op context.
-    with repro.use(backend=args.backend):
-        for mod in (bench_brgemm, bench_conv_strategies, bench_lstm,
-                    bench_fc, bench_conv_resnet50, bench_distributed_proxy):
+    # use(backend=None, ...) leaves every field unset — a no-op context.
+    with repro.use(backend=args.backend, blocks_policy=args.blocks_policy):
+        for mod in mods:
             try:
                 mod.run()
             except Exception:
                 ok = False
                 print(f"# ERROR in {mod.__name__}", file=sys.stderr)
                 traceback.print_exc()
+
+    if args.json:
+        payload = {
+            "platform": jax.default_backend(),
+            "backend": args.backend,
+            "blocks_policy": args.blocks_policy,
+            "ok": ok,
+            "records": common.RECORDS,
+        }
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=1)
+        print(f"# wrote {len(common.RECORDS)} records to {args.json}",
+              file=sys.stderr)
     if not ok:
         sys.exit(1)
 

@@ -7,14 +7,21 @@ interpret mode) scopes through the context API:
     with repro.use(backend="xla"):
         ...  # every primitive in here routes to the XLA reference path
 """
+from repro.core.blocking import (  # noqa: F401
+    AttnBlocks,
+    Blocks,
+    ConvBlocks,
+)
 from repro.core.dispatch import (  # noqa: F401
     ExecutionContext,
     available_backends,
     backends_for,
     current_context,
+    load_cache,
     registered_ops,
     resolve,
+    save_cache,
     use,
 )
 
-__version__ = "1.1.0"
+__version__ = "1.2.0"

@@ -1,4 +1,4 @@
-"""Blocking-factor heuristics for the batch-reduce GEMM kernel on TPU.
+"""Blocking factors for every kernel in the library, on TPU.
 
 The paper picks (m_b, n_b) so the accumulator block lives in registers and
 the A/B panels stream from cache (Sec. 2, Fig. 2b).  On TPU the constraints
@@ -11,10 +11,21 @@ become:
     be multiples of 128,
   * the working set (A panel + B panel, double-buffered, + fp32 accumulator)
     must fit the ~16 MiB/core VMEM.
+
+Every op family has its own block tuple (GEMM ``Blocks``, conv
+``ConvBlocks``, attention ``AttnBlocks``) but they all resolve through one
+schema table: :func:`default_blocks` is the static heuristic,
+:func:`candidate_blocks` enumerates the pruned VMEM-feasible search grid the
+measured autotuner (``core.autotune``) walks, and
+``blocks_to_dict``/``blocks_from_dict`` give every tuple a JSON round-trip
+for the persisted tuning cache.  Each op maps its loop nest onto a
+canonical (m, n, k) triple — see the schema table at the bottom.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Callable
+
 import jax.numpy as jnp
 
 LANE = 128
@@ -67,14 +78,228 @@ def choose_blocks(
     bn = min(round_up(n, LANE), prefer_bn)
     bk = min(round_up(k, LANE), prefer_bk)
 
-    def working_set(bm, bn, bk):
-        panels = (bm * bk + bk * bn) * itemsize * 2  # double buffered
-        acc = bm * bn * 4  # fp32 accumulator in VMEM scratch
-        out = bm * bn * itemsize * 2
-        return panels + acc + out
-
-    while working_set(bm, bn, bk) > vmem_budget and bk > LANE:
+    while gemm_working_set(bm, bn, bk, itemsize) > vmem_budget and bk > LANE:
         bk = max(LANE, bk // 2)
-    while working_set(bm, bn, bk) > vmem_budget and bm > sub:
+    while gemm_working_set(bm, bn, bk, itemsize) > vmem_budget and bm > sub:
         bm = max(sub, bm // 2)
     return Blocks(bm=bm, bn=bn, bk=bk)
+
+
+def gemm_working_set(bm: int, bn: int, bk: int, itemsize: int) -> int:
+    """VMEM bytes for one GEMM tile: A/B panels double-buffered + fp32
+    accumulator scratch + double-buffered output block.  The single
+    feasibility model shared by the heuristic and the candidate grid."""
+    panels = (bm * bk + bk * bn) * itemsize * 2
+    return panels + bm * bn * 4 + bm * bn * itemsize * 2
+
+
+# --------------------------------------------------------------------------
+# op-specific block tuples
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ConvBlocks:
+    """Direct-convolution tile: bq output pixels x bc input channels
+    (the reduce panel) x bk output channels."""
+    bq: int
+    bc: int
+    bk: int
+
+    def astuple(self):
+        return (self.bq, self.bc, self.bk)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnBlocks:
+    """Flash-attention tile: block_q query rows x block_k kv rows per
+    online-softmax step."""
+    block_q: int
+    block_k: int
+
+    def astuple(self):
+        return (self.block_q, self.block_k)
+
+
+def choose_conv_blocks(
+    q: int, c: int, k: int, dtype=jnp.float32
+) -> ConvBlocks:
+    """Static heuristic for conv2d: (q, c, k) = (out pixels/row, C, K)."""
+    bq = min(round_up(q, 8), 128)
+    bc = min(round_up(c, LANE), LANE)
+    bk = min(round_up(k, LANE), LANE)
+    return ConvBlocks(bq=bq, bc=bc, bk=bk)
+
+
+def choose_attention_blocks(
+    tq: int, tk: int, d: int, dtype=jnp.float32
+) -> AttnBlocks:
+    """Static heuristic for flash attention: (tq, tk, d) = (query len,
+    kv len, head dim)."""
+    del d
+    return AttnBlocks(block_q=min(round_up(tq, 8), 128),
+                      block_k=min(round_up(tk, LANE), LANE))
+
+
+# --------------------------------------------------------------------------
+# candidate grids for the measured autotuner
+# --------------------------------------------------------------------------
+#
+# Each enumerator returns a deterministic, pruned list: only tiles that are
+# hardware-legal, not wastefully larger than the (padded) problem, and whose
+# working set fits the VMEM budget.  The heuristic pick is always a member,
+# so autotuning can never do worse than the heuristic on the measured
+# problem.
+
+def _steps(lo: int, hi: int) -> list[int]:
+    out, v = [], lo
+    while v <= hi:
+        out.append(v)
+        v *= 2
+    return out
+
+
+def gemm_candidates(
+    m: int, n: int, k: int, dtype=jnp.float32, *,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> list[Blocks]:
+    itemsize = jnp.dtype(dtype).itemsize
+    sub = sublane(dtype)
+
+    bms = [b for b in _steps(sub, 256) if b <= round_up(m, sub) or b == sub]
+    bns = [b for b in _steps(LANE, 256)
+           if b <= round_up(n, LANE) or b == LANE]
+    bks = [b for b in _steps(LANE, 1024)
+           if b <= round_up(k, LANE) or b == LANE]
+    cands = [
+        Blocks(bm, bn, bk)
+        for bm in bms for bn in bns for bk in bks
+        if gemm_working_set(bm, bn, bk, itemsize) <= vmem_budget
+    ]
+    heur = choose_blocks(m, n, k, dtype, vmem_budget=vmem_budget)
+    if heur not in cands:
+        cands.append(heur)
+    return sorted(cands, key=lambda b: b.astuple())
+
+
+def conv_candidates(
+    q: int, c: int, k: int, dtype=jnp.float32, *,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> list[ConvBlocks]:
+    itemsize = jnp.dtype(dtype).itemsize
+
+    def working_set(bq, bc, bk):
+        # input row panel (bq * stride columns; stride folded into the
+        # proxy as 1) + weight panel, double buffered, + fp32 accumulator
+        panels = (bq * bc + bc * bk) * itemsize * 2
+        return panels + bq * bk * 4 + bq * bk * itemsize * 2
+
+    bqs = [b for b in _steps(8, 256) if b <= round_up(q, 8) or b == 8]
+    bcs = [b for b in _steps(LANE, 256)
+           if b <= round_up(c, LANE) or b == LANE]
+    bks = [b for b in _steps(LANE, 256)
+           if b <= round_up(k, LANE) or b == LANE]
+    cands = [
+        ConvBlocks(bq, bc, bk)
+        for bq in bqs for bc in bcs for bk in bks
+        if working_set(bq, bc, bk) <= vmem_budget
+    ]
+    heur = choose_conv_blocks(q, c, k, dtype)
+    if heur not in cands:
+        cands.append(heur)
+    return sorted(cands, key=lambda b: b.astuple())
+
+
+def attention_candidates(
+    tq: int, tk: int, d: int, dtype=jnp.float32, *,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> list[AttnBlocks]:
+    itemsize = jnp.dtype(dtype).itemsize
+    dp = round_up(d, LANE)
+
+    def working_set(bq, bk):
+        panels = (bq * dp + 2 * bk * dp) * itemsize * 2  # q + k + v
+        acc = bq * dp * 4 + 2 * bq * LANE * 4            # acc + (m, l)
+        return panels + acc + bq * bk * 4                # + scores block
+
+    bqs = [b for b in _steps(8, 256) if b <= round_up(tq, 8) or b == 8]
+    bks = [b for b in _steps(LANE, 512)
+           if b <= round_up(tk, LANE) or b == LANE]
+    cands = [
+        AttnBlocks(bq, bk)
+        for bq in bqs for bk in bks
+        if working_set(bq, bk) <= vmem_budget
+    ]
+    heur = choose_attention_blocks(tq, tk, d, dtype)
+    if heur not in cands:
+        cands.append(heur)
+    return sorted(cands, key=lambda b: b.astuple())
+
+
+# --------------------------------------------------------------------------
+# per-op schema: one resolution surface for every block tuple
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BlockSchema:
+    """How an op maps onto the canonical (m, n, k) tuning triple."""
+    kind: str                    # JSON tag
+    cls: type
+    dims: tuple[str, str, str]   # what (m, n, k) mean for this op
+    heuristic: Callable          # (m, n, k, dtype) -> block tuple
+    candidates: Callable         # (m, n, k, dtype) -> [block tuple]
+
+
+_GEMM_SCHEMA = BlockSchema(
+    kind="gemm", cls=Blocks, dims=("m", "n", "k"),
+    heuristic=choose_blocks, candidates=gemm_candidates)
+
+BLOCK_SCHEMAS: dict[str, BlockSchema] = {
+    "matmul": _GEMM_SCHEMA,
+    "brgemm": _GEMM_SCHEMA,
+    "batched_matmul": _GEMM_SCHEMA,
+    "conv2d": BlockSchema(
+        kind="conv", cls=ConvBlocks, dims=("q", "c", "k"),
+        heuristic=choose_conv_blocks, candidates=conv_candidates),
+    "flash_attention": BlockSchema(
+        kind="attn", cls=AttnBlocks, dims=("tq", "tk", "d"),
+        heuristic=choose_attention_blocks, candidates=attention_candidates),
+}
+
+
+def schema_for(op: str) -> BlockSchema:
+    schema = BLOCK_SCHEMAS.get(op)
+    if schema is None:
+        raise ValueError(
+            f"no block schema for op {op!r}; known: "
+            f"{', '.join(sorted(BLOCK_SCHEMAS))}")
+    return schema
+
+
+def default_blocks(op: str, m: int, n: int, k: int, dtype=jnp.float32):
+    """The static heuristic pick for ``op`` in its own block tuple type."""
+    return schema_for(op).heuristic(m, n, k, dtype)
+
+
+def candidate_blocks(op: str, m: int, n: int, k: int, dtype=jnp.float32):
+    """Deterministically ordered VMEM-feasible candidate tiles for ``op``."""
+    return schema_for(op).candidates(m, n, k, dtype)
+
+
+_KIND_TO_CLS = {s.kind: s.cls for s in BLOCK_SCHEMAS.values()}
+
+
+def blocks_to_dict(blocks) -> dict:
+    """JSON-serializable form of any op's block tuple."""
+    for schema in BLOCK_SCHEMAS.values():
+        if isinstance(blocks, schema.cls):
+            return {"kind": schema.kind, **dataclasses.asdict(blocks)}
+    raise TypeError(f"not a block tuple: {blocks!r}")
+
+
+def blocks_from_dict(d: dict):
+    """Inverse of :func:`blocks_to_dict`."""
+    d = dict(d)
+    cls = _KIND_TO_CLS.get(d.pop("kind", None))
+    if cls is None:
+        raise ValueError(f"unknown block kind in {d!r}")
+    return cls(**{k: int(v) for k, v in d.items()})

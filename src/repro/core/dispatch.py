@@ -25,14 +25,21 @@ priority available backend for that op.  An explicitly requested backend
 loudly rather than silently measuring the wrong path.
 
 Block selection routes through a memoized, shape-keyed tuning cache keyed
-``(op, backend, m, n, k, dtype, policy)`` so a future autotuner drops in
-via :func:`register_block_policy` without touching any call site.
+``(op, backend, m, n, k, dtype, policy)``.  Every op resolves its geometry
+here — the GEMM family's ``Blocks``, conv2d's ``ConvBlocks``, and
+flash-attention's ``AttnBlocks`` all flow through :func:`resolve_blocks`
+under a pluggable policy (``heuristic`` by default; the measured
+``autotune`` policy registers from :mod:`repro.core.autotune`).  The cache
+persists to JSON (:func:`save_cache` / :func:`load_cache`, or automatically
+via the ``REPRO_TUNING_CACHE`` env var) so tuning cost is paid once per
+machine.
 """
 from __future__ import annotations
 
 import contextlib
 import contextvars
 import dataclasses
+import json
 import os
 import threading
 import warnings
@@ -41,10 +48,16 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.blocking import Blocks, choose_blocks
+from repro.core.blocking import (
+    Blocks,
+    blocks_from_dict,
+    blocks_to_dict,
+    default_blocks,
+)
 
 ENV_VAR = "REPRO_BACKEND"
 LEGACY_ENV_VAR = "REPRO_BRGEMM_BACKEND"
+TUNING_CACHE_ENV = "REPRO_TUNING_CACHE"
 
 
 # --------------------------------------------------------------------------
@@ -181,11 +194,8 @@ def use(*, backend: str | None = None,
     """
     if backend is not None:
         _check_backend_name(backend)
-    if (blocks_policy is not None and not callable(blocks_policy)
-            and blocks_policy not in BLOCK_POLICIES):
-        raise ValueError(
-            f"unknown blocks_policy {blocks_policy!r}; registered policies: "
-            f"{', '.join(sorted(BLOCK_POLICIES))} (or pass a callable)")
+    if blocks_policy is not None and not callable(blocks_policy):
+        _policy_fn(blocks_policy)  # validates; lazily registers "autotune"
     ctx = ExecutionContext(backend=backend, blocks_policy=blocks_policy,
                            accum_dtype=accum_dtype, interpret=interpret)
     token = _STACK.set(_STACK.get() + (ctx,))
@@ -281,14 +291,16 @@ def resolve_accum_dtype(accum_dtype=None):
 # --------------------------------------------------------------------------
 
 BLOCK_POLICIES: dict[str, Callable] = {}
-_TUNING_CACHE: dict[tuple, Blocks] = {}
+_TUNING_CACHE: dict[tuple, Any] = {}
 _TUNING_LOCK = threading.Lock()
+_ENV_CACHE_LOADED = False
 
 
 def register_block_policy(name: str, fn: Callable) -> None:
     """Register a block-selection policy.
 
-    ``fn(op, m, n, k, dtype, backend) -> Blocks``.  Results are memoized in
+    ``fn(op, m, n, k, dtype, backend) -> block tuple`` (the op's own type:
+    ``Blocks`` / ``ConvBlocks`` / ``AttnBlocks``).  Results are memoized in
     the tuning cache, so an expensive search-based autotuner pays its cost
     once per (op, shape, dtype, backend).
     """
@@ -296,26 +308,45 @@ def register_block_policy(name: str, fn: Callable) -> None:
 
 
 register_block_policy(
-    "heuristic", lambda op, m, n, k, dtype, backend: choose_blocks(
-        m, n, k, dtype))
+    "heuristic", lambda op, m, n, k, dtype, backend: default_blocks(
+        op, m, n, k, dtype))
+
+
+def _policy_fn(name: str) -> Callable:
+    fn = BLOCK_POLICIES.get(name)
+    if fn is not None:
+        return fn
+    if name == "autotune":
+        # Registered lazily so importing dispatch never pays for the
+        # autotuner module (which imports every kernel package).
+        import repro.core.autotune  # noqa: F401
+        return BLOCK_POLICIES[name]
+    raise ValueError(
+        f"unknown blocks_policy {name!r}; registered policies: "
+        f"{', '.join(sorted(BLOCK_POLICIES))}")
 
 
 def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
-                   blocks: Blocks | None = None) -> Blocks:
-    """Block geometry for a GEMM-shaped op: call arg > context policy.
+                   blocks=None):
+    """Block geometry for ``op``: call arg > context policy > heuristic.
 
+    ``(m, n, k)`` is the op's canonical tuning triple (GEMM ``m/n/k``, conv
+    ``q/c/k``, attention ``tq/tk/d`` — see ``blocking.BLOCK_SCHEMAS``).
     Policy results are memoized keyed (op, backend, shapes, dtype, policy);
-    an explicit ``blocks`` argument bypasses the cache entirely.
+    an explicit ``blocks`` argument bypasses the cache entirely.  When
+    ``REPRO_TUNING_CACHE`` names a file, the cache is loaded from it on
+    first use and written through on every new entry.
     """
     if blocks is not None:
         return blocks
+    _maybe_load_env_cache()
     policy = current_context().blocks_policy or "heuristic"
     if callable(policy):
         # keyed on the callable itself so ad-hoc autotuners are memoized
         # too (a fresh lambda per call site gets a fresh entry)
         policy_fn, policy_key = policy, policy
     else:
-        policy_fn, policy_key = BLOCK_POLICIES[policy], policy
+        policy_fn, policy_key = _policy_fn(policy), policy
     key = (op, backend, int(m), int(n), int(k), jnp.dtype(dtype).name,
            policy_key)
     hit = _TUNING_CACHE.get(key)
@@ -323,15 +354,100 @@ def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
         hit = policy_fn(op, m, n, k, dtype, backend)
         with _TUNING_LOCK:
             _TUNING_CACHE[key] = hit
+        env_path = os.environ.get(TUNING_CACHE_ENV)
+        if env_path and isinstance(policy_key, str):
+            save_cache(env_path)
     return hit
 
 
-def tuning_cache_info() -> dict[tuple, Blocks]:
+def tuning_cache_info() -> dict[tuple, Any]:
     return dict(_TUNING_CACHE)
 
 
 def clear_tuning_cache() -> None:
+    global _ENV_CACHE_LOADED
     _TUNING_CACHE.clear()
+    _ENV_CACHE_LOADED = False
+
+
+def _maybe_load_env_cache() -> None:
+    global _ENV_CACHE_LOADED
+    if _ENV_CACHE_LOADED:
+        return
+    _ENV_CACHE_LOADED = True  # one attempt per process (or per cache clear)
+    path = os.environ.get(TUNING_CACHE_ENV)
+    if path and os.path.exists(path):
+        load_cache(path)
+
+
+def _entry_key(e: dict) -> tuple:
+    return (e["op"], e["backend"], int(e["m"]), int(e["n"]), int(e["k"]),
+            e["dtype"], e["policy"], e.get("platform"))
+
+
+def save_cache(path: str | None = None) -> int:
+    """Persist the tuning cache as JSON; returns the number of entries.
+
+    Entries keyed by an ad-hoc callable policy are skipped (a function
+    identity does not survive the process); named-policy entries round-trip.
+    Each entry is stamped with the measuring platform
+    (``jax.default_backend()``) so CPU interpret-mode timings never dictate
+    TPU tiles.  Entries already in the file but not in memory (e.g. written
+    by a concurrent process sharing the file, or measured on another
+    platform) are preserved, not clobbered.
+    """
+    path = path or os.environ.get(TUNING_CACHE_ENV)
+    if not path:
+        raise ValueError(
+            f"no path given and {TUNING_CACHE_ENV} is not set")
+    platform = jax.default_backend()
+    with _TUNING_LOCK:
+        entries = [
+            {"op": op, "backend": backend, "m": m, "n": n, "k": k,
+             "dtype": dtype, "policy": policy, "platform": platform,
+             "blocks": blocks_to_dict(blk)}
+            for (op, backend, m, n, k, dtype, policy), blk
+            in _TUNING_CACHE.items()
+            if isinstance(policy, str)
+        ]
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                prior = json.load(f).get("entries", [])
+        except (OSError, ValueError):
+            prior = []
+        seen = {_entry_key(e) for e in entries}
+        entries += [e for e in prior if _entry_key(e) not in seen]
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump({"version": 1, "entries": entries}, f, indent=1)
+    os.replace(tmp, path)  # atomic: concurrent readers see old or new
+    return len(entries)
+
+
+def load_cache(path: str | None = None) -> int:
+    """Merge a JSON tuning cache into the in-memory one; returns the number
+    of entries actually inserted.  In-memory entries win on key collision
+    (they are at least as fresh as the file), and entries measured on a
+    different platform are ignored (their timings don't transfer)."""
+    path = path or os.environ.get(TUNING_CACHE_ENV)
+    if not path:
+        raise ValueError(
+            f"no path given and {TUNING_CACHE_ENV} is not set")
+    with open(path) as f:
+        data = json.load(f)
+    platform = jax.default_backend()
+    count = 0
+    with _TUNING_LOCK:
+        for e in data.get("entries", ()):
+            if e.get("platform", platform) != platform:
+                continue
+            key = (e["op"], e["backend"], int(e["m"]), int(e["n"]),
+                   int(e["k"]), e["dtype"], e["policy"])
+            if key not in _TUNING_CACHE:
+                _TUNING_CACHE[key] = blocks_from_dict(e["blocks"])
+                count += 1
+    return count
 
 
 # --------------------------------------------------------------------------

@@ -1,1 +1,2 @@
+from repro.core.blocking import ConvBlocks  # noqa: F401
 from repro.kernels.conv2d.ops import conv2d  # noqa: F401

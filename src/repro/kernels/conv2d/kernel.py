@@ -28,23 +28,16 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import dispatch
 from repro.core import pallas_compat as _pc
 from repro.core import fusion
-from repro.core.blocking import round_up
-
-
-def _choose_conv_blocks(q: int, c: int, k: int, dtype):
-    """bq (output-pixel block), bc (input-chan block), bk (output-chan block)."""
-    bq = min(round_up(q, 8), 128)
-    bc = min(round_up(c, 128), 128)
-    bk = min(round_up(k, 128), 128)
-    return bq, bc, bk
+from repro.core.blocking import ConvBlocks, round_up
 
 
 @functools.partial(
     jax.jit,
     static_argnames=("stride", "padding", "activation", "out_dtype",
-                     "interpret"),
+                     "blocks", "interpret", "acc_dtype"),
 )
 def conv2d_pallas(
     x,
@@ -55,9 +48,18 @@ def conv2d_pallas(
     padding: int = 0,
     activation: str = "none",
     out_dtype=None,
+    blocks: ConvBlocks | None = None,
     interpret: bool = False,
+    acc_dtype=jnp.float32,
 ):
-    """x: (N, H, W, C), w: (R, S, C, K) -> (N, P, Q, K)."""
+    """x: (N, H, W, C), w: (R, S, C, K) -> (N, P, Q, K).
+
+    Tile geometry comes from ``blocks`` (a ``ConvBlocks``); when unset it
+    resolves through ``dispatch.resolve_blocks`` under the active block
+    policy — the kernel itself makes no geometry choices.  The requested
+    tile is clipped to the padded problem so any VMEM-feasible candidate
+    is legal.
+    """
     n, h, wi, c = x.shape
     r_, s_, c2, k = w.shape
     assert c == c2, (x.shape, w.shape)
@@ -65,7 +67,11 @@ def conv2d_pallas(
     p = (h + 2 * padding - r_) // stride + 1
     q = (wi + 2 * padding - s_) // stride + 1
 
-    bq, bc, bk = _choose_conv_blocks(q, c, k, x.dtype)
+    blk = blocks or dispatch.resolve_blocks(
+        "conv2d", q, c, k, x.dtype, backend="pallas")
+    bq = min(round_up(q, 8), blk.bq)
+    bc = min(round_up(c, 128), blk.bc)
+    bk = min(round_up(k, 128), blk.bk)
     qp = round_up(q, bq)
     cp = round_up(c, bc)
     kp = round_up(k, bk)
@@ -131,7 +137,7 @@ def conv2d_pallas(
         if stride > 1:
             patch = patch.reshape(bq, stride, bc)[:, 0, :]
         acc_ref[...] += jnp.dot(
-            patch, w_ref[0], preferred_element_type=jnp.float32)
+            patch, w_ref[0], preferred_element_type=acc_dtype)
 
         @pl.when(rsc == nsteps - 1)
         def _():
@@ -148,7 +154,7 @@ def conv2d_pallas(
         out_specs=pl.BlockSpec(
             (1, 1, bq, bk), lambda ni, kbi, oj, oib, rsc: (ni, oj, oib, kbi)),
         out_shape=jax.ShapeDtypeStruct((n, p, qp, kp), out_dtype),
-        scratch_shapes=[pltpu.VMEM((bq, bk), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((bq, bk), acc_dtype)],
         compiler_params=_pc.CompilerParams(
             dimension_semantics=(
                 "parallel", "parallel", "parallel", "parallel", "arbitrary"),

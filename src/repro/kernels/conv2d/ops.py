@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dispatch, fusion
+from repro.core.blocking import ConvBlocks
 from repro.kernels.brgemm import kernel as BK
 from repro.kernels.conv2d import ref as R
 from repro.kernels.conv2d.kernel import conv2d_pallas
@@ -29,7 +30,9 @@ class _Cfg(NamedTuple):
     padding: int
     activation: str
     out_dtype: object
+    blocks: ConvBlocks | None
     interpret: bool
+    acc_dtype: object
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
@@ -37,7 +40,8 @@ def _conv_p(cfg: _Cfg, x, w, bias):
     return conv2d_pallas(
         x, w, bias, stride=cfg.stride, padding=cfg.padding,
         activation=cfg.activation, out_dtype=cfg.out_dtype,
-        interpret=cfg.interpret)
+        blocks=cfg.blocks, interpret=cfg.interpret,
+        acc_dtype=cfg.acc_dtype)
 
 
 def _conv_fwd(cfg, x, w, bias):
@@ -69,7 +73,8 @@ def _conv_bwd(cfg, res, dy):
     else:
         pre = conv2d_pallas(
             x, w, bias, stride=st, padding=pad, activation="none",
-            out_dtype=jnp.float32, interpret=cfg.interpret)
+            out_dtype=jnp.float32, blocks=cfg.blocks,
+            interpret=cfg.interpret)
         g = dy32 * fusion.GRAD_FROM_PREACT[cfg.activation](pre)
     g = g.astype(x.dtype)
 
@@ -113,15 +118,21 @@ _conv_p.defvjp(_conv_fwd, _conv_bwd)
 @dispatch.register("conv2d", "pallas", available=dispatch.pallas_available,
                    priority=10)
 def _conv2d_pallas_backend(x, w, bias, *, stride, padding, activation,
-                           out_dtype):
-    cfg = _Cfg(stride, padding, activation, out_dtype,
-               dispatch.resolve_interpret())
+                           out_dtype, blocks):
+    n, h, wi, c = x.shape
+    r_, s_, _, k = w.shape
+    q = (wi + 2 * padding - s_) // stride + 1
+    blk = dispatch.resolve_blocks("conv2d", q, c, k, x.dtype,
+                                  backend="pallas", blocks=blocks)
+    cfg = _Cfg(stride, padding, activation, out_dtype, blk,
+               dispatch.resolve_interpret(), dispatch.resolve_accum_dtype())
     return _conv_p(cfg, x, w, bias)
 
 
 @dispatch.register("conv2d", "xla")
 def _conv2d_xla_backend(x, w, bias, *, stride, padding, activation,
-                        out_dtype):
+                        out_dtype, blocks):
+    del blocks  # tiling is an XLA-internal decision on this path
     return R.conv2d_ref(
         x, w, bias, stride=stride, padding=padding, activation=activation,
         out_dtype=out_dtype)
@@ -137,8 +148,14 @@ def conv2d(
     activation: str = "none",
     out_dtype=None,
     backend: str | None = None,
+    blocks: ConvBlocks | None = None,
 ):
-    """Direct convolution via batch-reduce GEMM. NHWC x RSCK -> NHWC."""
+    """Direct convolution via batch-reduce GEMM. NHWC x RSCK -> NHWC.
+
+    ``blocks`` (a ``ConvBlocks``) is the explicit tier-1 geometry override;
+    by default the tile resolves through ``dispatch.resolve_blocks`` under
+    the active ``repro.use(blocks_policy=...)``.
+    """
     impl = dispatch.get_impl("conv2d", backend)
     return impl(x, w, bias, stride=stride, padding=padding,
-                activation=activation, out_dtype=out_dtype)
+                activation=activation, out_dtype=out_dtype, blocks=blocks)

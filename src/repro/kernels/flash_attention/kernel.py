@@ -21,8 +21,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import dispatch
 from repro.core import pallas_compat as _pc
-from repro.core.blocking import round_up
+from repro.core.blocking import AttnBlocks, round_up
 
 NEG_INF = -1e30
 STATS_LANES = 128
@@ -30,8 +31,8 @@ STATS_LANES = 128
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "scale", "block_q", "block_k",
-                     "interpret"),
+    static_argnames=("causal", "window", "scale", "blocks", "interpret",
+                     "acc_dtype"),
 )
 def flash_attention_pallas(
     q,
@@ -41,19 +42,28 @@ def flash_attention_pallas(
     causal: bool = True,
     window: int | None = None,
     scale: float | None = None,
-    block_q: int = 128,
-    block_k: int = 128,
+    blocks: AttnBlocks | None = None,
     interpret: bool = False,
+    acc_dtype=jnp.float32,
 ):
-    """q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d) -> (B, Hq, Tq, d)."""
+    """q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d) -> (B, Hq, Tq, d).
+
+    Tile geometry comes from ``blocks`` (an ``AttnBlocks``); when unset it
+    resolves through ``dispatch.resolve_blocks`` under the active block
+    policy — the kernel itself makes no geometry choices.  The running
+    softmax statistics (m, l) always stay fp32; ``acc_dtype`` governs the
+    output accumulator only.
+    """
     b, hq, tq, d = q.shape
     _, hkv, tk, _ = k.shape
     assert hq % hkv == 0
     group = hq // hkv
     scale = scale if scale is not None else d ** -0.5
 
-    bq = min(round_up(tq, 8), block_q)
-    bk = min(round_up(tk, 128), block_k)
+    blk = blocks or dispatch.resolve_blocks(
+        "flash_attention", tq, tk, d, q.dtype, backend="pallas")
+    bq = min(round_up(tq, 8), blk.block_q)
+    bk = min(round_up(tk, 128), blk.block_k)
     tqp, tkp = round_up(tq, bq), round_up(tk, bk)
     dp = round_up(d, 128)
 
@@ -100,9 +110,11 @@ def flash_attention_pallas(
             p = jnp.exp(s - m_new)                      # (bq, bk)
             corr = jnp.exp(m_prev - m_new)              # (bq, 1)
             l_new = corr * l_prev + p.sum(axis=-1, keepdims=True)
-            acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            pv = jax.lax.dot_general(
                 p.astype(v_ref.dtype), v_ref[0, 0], (((1,), (0,)), ((), ())),
-                preferred_element_type=jnp.float32)
+                preferred_element_type=acc_dtype)
+            acc_ref[...] = (acc_ref[...] * corr.astype(acc_dtype)
+                            + pv).astype(acc_dtype)
             m_ref[...] = jnp.broadcast_to(m_new, m_ref.shape)
             l_ref[...] = jnp.broadcast_to(l_new, l_ref.shape)
 
@@ -118,7 +130,8 @@ def flash_attention_pallas(
         def _():
             l = l_ref[:, :1]
             l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
-            o_ref[...] = (acc_ref[...] / l).astype(o_ref.dtype)[None, None]
+            o_ref[...] = (acc_ref[...].astype(jnp.float32)
+                          / l).astype(o_ref.dtype)[None, None]
 
     out = pl.pallas_call(
         body,
@@ -134,7 +147,7 @@ def flash_attention_pallas(
                                lambda b_, h, i, j: (b_, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hq, tqp, dp), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq, dp), jnp.float32),
+            pltpu.VMEM((bq, dp), acc_dtype),
             pltpu.VMEM((bq, STATS_LANES), jnp.float32),
             pltpu.VMEM((bq, STATS_LANES), jnp.float32),
         ],

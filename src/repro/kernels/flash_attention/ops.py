@@ -9,12 +9,14 @@ forward stays the fused kernel — the hot path for serving/prefill).
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import dispatch
+from repro.core.blocking import AttnBlocks
 from repro.kernels.flash_attention import ref as R
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 
@@ -23,14 +25,17 @@ class _Cfg(NamedTuple):
     causal: bool
     window: int | None
     scale: float | None
+    blocks: AttnBlocks | None
     interpret: bool
+    acc_dtype: object
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
 def _flash_p(cfg: _Cfg, q, k, v):
     return flash_attention_pallas(
         q, k, v, causal=cfg.causal, window=cfg.window, scale=cfg.scale,
-        interpret=cfg.interpret)
+        blocks=cfg.blocks, interpret=cfg.interpret,
+        acc_dtype=cfg.acc_dtype)
 
 
 def _flash_fwd(cfg, q, k, v):
@@ -54,14 +59,21 @@ _flash_p.defvjp(_flash_fwd, _flash_bwd)
 @dispatch.register("flash_attention", "pallas",
                    available=dispatch.pallas_available, priority=10)
 def _flash_pallas_backend(q, k, v, *, causal, window, scale, xla_impl,
-                          unroll):
+                          unroll, blocks):
     del xla_impl, unroll  # XLA-path-only knobs
-    cfg = _Cfg(causal, window, scale, dispatch.resolve_interpret())
+    tq, d = q.shape[-2:]
+    tk = k.shape[-2]
+    blk = dispatch.resolve_blocks("flash_attention", tq, tk, d, q.dtype,
+                                  backend="pallas", blocks=blocks)
+    cfg = _Cfg(causal, window, scale, blk, dispatch.resolve_interpret(),
+               dispatch.resolve_accum_dtype())
     return _flash_p(cfg, q, k, v)
 
 
 @dispatch.register("flash_attention", "xla")
-def _flash_xla_backend(q, k, v, *, causal, window, scale, xla_impl, unroll):
+def _flash_xla_backend(q, k, v, *, causal, window, scale, xla_impl, unroll,
+                       blocks):
+    del blocks  # tiling is an XLA-internal decision on this path
     if xla_impl == "chunked":
         return R.mha_chunked(q, k, v, causal=causal, window=window,
                              scale=scale, unroll=unroll)
@@ -71,14 +83,34 @@ def _flash_xla_backend(q, k, v, *, causal, window, scale, xla_impl, unroll):
 def flash_attention(q, k, v, *, causal: bool = True,
                     window: int | None = None, scale: float | None = None,
                     backend: str | None = None, xla_impl: str = "naive",
-                    unroll: bool = False):
+                    unroll: bool = False,
+                    blocks: AttnBlocks | None = None,
+                    block_q: int | None = None, block_k: int | None = None):
     """xla_impl: 'naive' (full T^2 softmax) or 'chunked' (online softmax,
-    flash semantics — the XLA-path memory optimization)."""
+    flash semantics — the XLA-path memory optimization).
+
+    ``blocks`` (an ``AttnBlocks``) is the explicit tier-1 geometry
+    override; by default the tile resolves through
+    ``dispatch.resolve_blocks`` under the active block policy.  The old
+    per-dimension ``block_q=``/``block_k=`` kwargs still work but are
+    deprecated in favor of ``blocks=``.
+    """
     # Validated here, not in the xla impl: a typo'd value must fail the
     # same way whichever backend dispatch resolves to.
     if xla_impl not in ("naive", "chunked"):
         raise ValueError(
             f"unknown xla_impl {xla_impl!r}; expected 'naive' or 'chunked'")
+    if block_q is not None or block_k is not None:
+        warnings.warn(
+            "flash_attention(block_q=..., block_k=...) is deprecated; pass "
+            "blocks=AttnBlocks(block_q, block_k) instead",
+            DeprecationWarning, stacklevel=2)
+        if blocks is not None:
+            raise ValueError(
+                "pass either blocks= or the deprecated block_q=/block_k=, "
+                "not both")
+        blocks = AttnBlocks(block_q=block_q if block_q is not None else 128,
+                            block_k=block_k if block_k is not None else 128)
     impl = dispatch.get_impl("flash_attention", backend)
     return impl(q, k, v, causal=causal, window=window, scale=scale,
-                xla_impl=xla_impl, unroll=unroll)
+                xla_impl=xla_impl, unroll=unroll, blocks=blocks)

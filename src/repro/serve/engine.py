@@ -27,21 +27,31 @@ class ServeConfig:
 
 class Engine:
     def __init__(self, cfg: ArchCfg, params, scfg: ServeConfig, *,
-                 backend: str | None = None):
+                 backend: str | None = None,
+                 blocks_policy=None, accum_dtype=None):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.backend = backend
+        self.blocks_policy = blocks_policy
+        self.accum_dtype = accum_dtype
 
-        # Backend selection scopes through the execution context; it is
-        # captured at trace time, so each jit entry point re-enters the
-        # engine's context when it traces.
+        # The engine's serving tier (backend, block policy, accumulation
+        # dtype) scopes through the execution context; it is captured at
+        # trace time, so each jit entry point re-enters the engine's
+        # context when it traces.  With blocks_policy="autotune" the first
+        # trace pays the measured search (or reads the persisted
+        # REPRO_TUNING_CACHE) and every later request reuses the winners.
         def _prefill(p, b, c):
-            with dispatch.use(backend=self.backend):
+            with dispatch.use(backend=self.backend,
+                              blocks_policy=self.blocks_policy,
+                              accum_dtype=self.accum_dtype):
                 return api.prefill(p, b, cfg, c)
 
         def _decode(p, t, c, pos):
-            with dispatch.use(backend=self.backend):
+            with dispatch.use(backend=self.backend,
+                              blocks_policy=self.blocks_policy,
+                              accum_dtype=self.accum_dtype):
                 return api.decode_step(p, t, cfg, c, pos)
 
         self._prefill = jax.jit(_prefill)

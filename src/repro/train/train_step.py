@@ -23,16 +23,29 @@ from repro.distributed.collectives import compress_grads, decompress_grads
 
 def make_train_step(cfg: ArchCfg, ocfg: opt.AdamWCfg, *,
                     microbatches: int = 1, grad_compression: str = "none",
-                    backend: str | None = None):
-    """Returns train_step(state, batch) -> (state, metrics)."""
+                    backend: str | None = None, blocks_policy=None,
+                    accum_dtype=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``blocks_policy``/``accum_dtype`` scope the whole step's kernels
+    (e.g. ``blocks_policy="autotune"`` tunes every GEMM/conv/attention tile
+    at first trace; ``accum_dtype=jnp.bfloat16`` trades accumulator
+    precision for VMEM headroom)."""
 
     def loss_of(params, batch):
-        # Backend selection scopes through the execution context (captured
-        # when the surrounding jit traces).
-        with dispatch.use(backend=backend):
-            return api.loss_fn(params, batch, cfg)
+        return api.loss_fn(params, batch, cfg)
 
     def train_step(state, batch):
+        # Execution configuration scopes through the context (captured
+        # when the surrounding jit traces).  It wraps the whole step — not
+        # just the loss — so the custom-VJP backward rules (dgrad/wgrad
+        # kernels, traced when value_and_grad pulls back cotangents)
+        # resolve their block geometry under the same tuned context.
+        with dispatch.use(backend=backend, blocks_policy=blocks_policy,
+                          accum_dtype=accum_dtype):
+            return _train_step(state, batch)
+
+    def _train_step(state, batch):
         params = opt.cast_params(state["opt"], cfg.dtype)
 
         if microbatches > 1:

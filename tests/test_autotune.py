@@ -1,0 +1,290 @@
+"""The measured tuning surface: op-specific block tuples through
+``resolve_blocks``, the autotune policy, and tuning-cache persistence."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import autotune, blocking, dispatch
+from repro.core.blocking import AttnBlocks, Blocks, ConvBlocks
+from repro.kernels.conv2d import conv2d
+from repro.kernels.flash_attention import flash_attention
+
+
+def _randn(*shape, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed + len(shape))
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    dispatch.clear_tuning_cache()
+    yield
+    dispatch.clear_tuning_cache()
+
+
+# --------------------------------------------------------------------------
+# op-specific block tuples through one resolution surface
+# --------------------------------------------------------------------------
+
+def test_heuristic_policy_returns_op_specific_tuples():
+    assert isinstance(
+        dispatch.resolve_blocks("matmul", 64, 64, 64, jnp.float32,
+                                backend="pallas"), Blocks)
+    assert isinstance(
+        dispatch.resolve_blocks("conv2d", 28, 128, 64, jnp.float32,
+                                backend="pallas"), ConvBlocks)
+    assert isinstance(
+        dispatch.resolve_blocks("flash_attention", 128, 128, 64,
+                                jnp.float32, backend="pallas"), AttnBlocks)
+
+
+@pytest.mark.parametrize("blk", [
+    Blocks(bm=32, bn=128, bk=256),
+    ConvBlocks(bq=16, bc=128, bk=128),
+    AttnBlocks(block_q=64, block_k=128),
+])
+def test_block_tuple_json_round_trip(blk):
+    d = blocking.blocks_to_dict(blk)
+    json.loads(json.dumps(d))  # actually JSON-serializable
+    assert blocking.blocks_from_dict(d) == blk
+
+
+def test_explicit_conv_blocks_honored_and_parity():
+    x = _randn(1, 8, 8, 2, seed=1)
+    w = _randn(3, 3, 2, 4, seed=2) * 0.3
+    want = conv2d(x, w, stride=1, padding=1, backend="xla")
+    for blk in (ConvBlocks(8, 128, 128), ConvBlocks(16, 128, 128)):
+        got = conv2d(x, w, stride=1, padding=1, backend="pallas",
+                     blocks=blk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+    assert not dispatch.tuning_cache_info()  # explicit blocks bypass
+
+
+def test_explicit_attn_blocks_honored_and_parity():
+    q = _randn(1, 2, 64, 16, seed=3)
+    want = flash_attention(q, q, q, backend="xla")
+    for blk in (AttnBlocks(32, 128), AttnBlocks(64, 128)):
+        got = flash_attention(q, q, q, backend="pallas", blocks=blk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-3, atol=2e-3)
+    assert not dispatch.tuning_cache_info()
+
+
+def test_conv_and_attention_resolve_through_cache():
+    x = _randn(1, 8, 8, 2, seed=1)
+    w = _randn(3, 3, 2, 4, seed=2) * 0.3
+    conv2d(x, w, backend="pallas")
+    q = _randn(1, 2, 32, 16, seed=3)
+    flash_attention(q, q, q, backend="pallas")
+    ops = {key[0] for key in dispatch.tuning_cache_info()}
+    assert {"conv2d", "flash_attention"} <= ops
+
+
+def test_accum_dtype_threads_into_conv_and_attention():
+    x = _randn(1, 8, 8, 2, seed=1)
+    w = _randn(3, 3, 2, 4, seed=2) * 0.3
+    q = _randn(1, 2, 32, 16, seed=3)
+    want_c = conv2d(x, w, backend="xla")
+    want_a = flash_attention(q, q, q, backend="xla")
+    with repro.use(accum_dtype=jnp.bfloat16):
+        got_c = conv2d(x, w, backend="pallas")
+        got_a = flash_attention(q, q, q, backend="pallas")
+    # bf16 accumulation is lossier but must stay in the right ballpark
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c),
+                               rtol=0.1, atol=0.1)
+    np.testing.assert_allclose(np.asarray(got_a), np.asarray(want_a),
+                               rtol=0.1, atol=0.1)
+
+
+def test_deprecated_block_kwargs_still_work():
+    q = _randn(1, 2, 64, 16, seed=4)
+    want = flash_attention(q, q, q, backend="pallas",
+                           blocks=AttnBlocks(32, 128))
+    with pytest.warns(DeprecationWarning, match="block_q"):
+        got = flash_attention(q, q, q, backend="pallas", block_q=32,
+                              block_k=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="not both"):
+            flash_attention(q, q, q, blocks=AttnBlocks(32, 128), block_q=32)
+
+
+# --------------------------------------------------------------------------
+# candidate grids
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("op,shape", [
+    ("matmul", (64, 128, 256)),
+    ("conv2d", (28, 128, 64)),
+    ("flash_attention", (128, 256, 64)),
+])
+def test_candidates_deterministic_and_include_heuristic(op, shape):
+    c1 = blocking.candidate_blocks(op, *shape)
+    c2 = blocking.candidate_blocks(op, *shape)
+    assert c1 == c2
+    assert len(c1) == len(set(c1)) > 1
+    assert blocking.default_blocks(op, *shape) in c1
+
+
+# --------------------------------------------------------------------------
+# the measured policy
+# --------------------------------------------------------------------------
+
+def _seeded_timer(seed):
+    """Deterministic fake cost, pseudo-random in the candidate tuple."""
+    def timer(op, m, n, k, dtype, backend, blocks):
+        h = hash((seed, op, blocks.astuple()))
+        return (h % 1000) / 1000.0
+    return timer
+
+
+def test_autotune_deterministic_under_seeded_costs():
+    timer = _seeded_timer(42)
+    picks = [autotune.autotune_blocks("matmul", 64, 128, 256, jnp.float32,
+                                      "pallas", timer=timer)
+             for _ in range(3)]
+    assert picks[0] == picks[1] == picks[2]
+    # and the pick is the argmin of the injected cost over the pruned grid
+    cands = autotune._prune(
+        blocking.candidate_blocks("matmul", 64, 128, 256, jnp.float32),
+        blocking.default_blocks("matmul", 64, 128, 256, jnp.float32),
+        autotune.DEFAULT_MAX_CANDIDATES)
+    want = min(cands, key=lambda b: timer(
+        "matmul", 64, 128, 256, jnp.float32, "pallas", b))
+    assert picks[0] == want
+
+
+def test_autotune_measurably_changes_selected_tiles():
+    heur = blocking.default_blocks("matmul", 256, 256, 256, jnp.float32)
+
+    def timer(op, m, n, k, dtype, backend, blocks):
+        return 2.0 if blocks == heur else 1.0  # any non-heuristic tile wins
+
+    with repro.use(blocks_policy=lambda op, m, n, k, dt, be:
+                   autotune.autotune_blocks(op, m, n, k, dt, be,
+                                            timer=timer)):
+        tuned = dispatch.resolve_blocks("matmul", 256, 256, 256,
+                                        jnp.float32, backend="pallas")
+    assert tuned != heur
+
+
+def test_autotune_survives_failing_candidates():
+    heur = blocking.default_blocks("matmul", 64, 64, 64, jnp.float32)
+
+    def timer(op, m, n, k, dtype, backend, blocks):
+        raise RuntimeError("measurement exploded")
+
+    got = autotune.autotune_blocks("matmul", 64, 64, 64, jnp.float32,
+                                   "pallas", timer=timer)
+    assert got == heur  # falls back to the heuristic pick
+
+
+def test_autotune_skips_measurement_off_pallas():
+    before = autotune.STATS.measured
+    got = autotune.autotune_blocks("matmul", 64, 64, 64, jnp.float32, "xla")
+    assert got == blocking.default_blocks("matmul", 64, 64, 64, jnp.float32)
+    assert autotune.STATS.measured == before
+
+
+def test_autotune_policy_runs_real_measurement_and_memoizes():
+    """Tiny real search (interpret-safe on CPU) through the named policy."""
+    before = autotune.STATS.measured
+    with repro.use(blocks_policy=lambda op, m, n, k, dt, be:
+                   autotune.autotune_blocks(op, m, n, k, dt, be,
+                                            max_candidates=2, repeats=1)):
+        b1 = dispatch.resolve_blocks("matmul", 16, 16, 16, jnp.float32,
+                                     backend="pallas")
+        b2 = dispatch.resolve_blocks("matmul", 16, 16, 16, jnp.float32,
+                                     backend="pallas")
+    assert b1 is b2  # memoized: one search, two resolutions
+    assert autotune.STATS.measured == before + 2
+
+
+# --------------------------------------------------------------------------
+# cache persistence
+# --------------------------------------------------------------------------
+
+def test_cache_save_load_round_trip(tmp_path):
+    path = str(tmp_path / "cache.json")
+    for op, shape in [("matmul", (64, 128, 256)), ("conv2d", (28, 128, 64)),
+                      ("flash_attention", (128, 128, 64))]:
+        dispatch.resolve_blocks(op, *shape, jnp.float32, backend="pallas")
+    saved = dispatch.save_cache(path)
+    assert saved == 3
+    before = dispatch.tuning_cache_info()
+    dispatch.clear_tuning_cache()
+    assert dispatch.load_cache(path) == 3
+    assert dispatch.tuning_cache_info() == before
+
+
+def test_callable_policy_entries_not_persisted(tmp_path):
+    path = str(tmp_path / "cache.json")
+    with repro.use(blocks_policy=lambda op, m, n, k, dt, be:
+                   Blocks(8, 128, 128)):
+        dispatch.resolve_blocks("matmul", 16, 16, 16, jnp.float32,
+                                backend="pallas")
+    assert dispatch.save_cache(path) == 0
+
+
+def test_env_cache_written_through_and_reloaded(tmp_path, monkeypatch):
+    """Simulates the two-process flow: a cold run persists winners; a fresh
+    process (cache cleared) reloads them and re-measures nothing."""
+    path = str(tmp_path / "cache.json")
+    monkeypatch.setenv(dispatch.TUNING_CACHE_ENV, path)
+
+    calls = []
+
+    def counting_policy(op, m, n, k, dtype, backend):
+        calls.append(op)
+        return blocking.default_blocks(op, m, n, k, dtype)
+
+    dispatch.register_block_policy("counting", counting_policy)
+    try:
+        with repro.use(blocks_policy="counting"):
+            first = dispatch.resolve_blocks("conv2d", 28, 128, 64,
+                                            jnp.float32, backend="pallas")
+        assert calls == ["conv2d"]
+        assert json.load(open(path))["entries"]  # written through
+
+        dispatch.clear_tuning_cache()  # "new process"
+        with repro.use(blocks_policy="counting"):
+            second = dispatch.resolve_blocks("conv2d", 28, 128, 64,
+                                             jnp.float32, backend="pallas")
+        assert calls == ["conv2d"]  # served from the persisted file
+        assert second == first
+    finally:
+        dispatch.BLOCK_POLICIES.pop("counting", None)
+
+
+def test_load_cache_requires_path(monkeypatch):
+    monkeypatch.delenv(dispatch.TUNING_CACHE_ENV, raising=False)
+    with pytest.raises(ValueError, match=dispatch.TUNING_CACHE_ENV):
+        dispatch.save_cache()
+    with pytest.raises(ValueError, match=dispatch.TUNING_CACHE_ENV):
+        dispatch.load_cache()
+
+
+# --------------------------------------------------------------------------
+# end-to-end: tuned context changes execution, parity holds
+# --------------------------------------------------------------------------
+
+def test_conv_and_attention_parity_under_autotune_policy():
+    x = _randn(1, 8, 8, 2, seed=5)
+    w = _randn(3, 3, 2, 4, seed=6) * 0.3
+    q = _randn(1, 2, 32, 16, seed=7)
+    want_c = conv2d(x, w, backend="xla")
+    want_a = flash_attention(q, q, q, backend="xla")
+    with repro.use(blocks_policy=lambda op, m, n, k, dt, be:
+                   autotune.autotune_blocks(op, m, n, k, dt, be,
+                                            max_candidates=2, repeats=1)):
+        got_c = conv2d(x, w, backend="pallas")
+        got_a = flash_attention(q, q, q, backend="pallas")
+    np.testing.assert_allclose(np.asarray(got_c), np.asarray(want_c),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(got_a), np.asarray(want_a),
+                               rtol=2e-3, atol=2e-3)
