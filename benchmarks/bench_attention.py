@@ -1,0 +1,64 @@
+"""Flash-attention timings: fused forward, fused backward, and the
+fwd+bwd train-step path through the custom VJP.
+
+``attn_fwd_*``   — the forward flash kernel (prefill/serving hot path),
+``attn_bwd_*``   — the fused backward alone (dQ/dK/dV from saved
+                   residuals; the vjp closure is jitted so only the three
+                   backward kernels are timed),
+``attn_train_*`` — value_and_grad through the attention op: forward with
+                   residual emission plus the fused backward, the shape of
+                   one attention layer inside a train step.
+
+Derived column reports achieved GFLOP/s on the standard attention flop
+model (4*B*H*Tq*Tk*D forward; the backward re-does the two forward GEMMs
+plus three gradient GEMMs, ~2.5x)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.kernels.flash_attention import flash_attention
+
+CASES = [
+    # (B, H, T, D, causal, window)
+    (1, 4, 256, 64, True, None),
+    (1, 4, 256, 64, True, 128),
+    (1, 4, 512, 64, True, None),
+    (1, 4, 256, 64, False, None),
+]
+
+
+def _gflops(fl, us):
+    return f"{fl / (us * 1e-6) / 1e9:.1f}GFLOP/s"
+
+
+def run():
+    rng = np.random.default_rng(0)
+    for (b, h, t, d, causal, window) in CASES:
+        q = jnp.asarray(rng.normal(size=(b, h, t, d)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, h, t, d)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, h, t, d)), jnp.float32)
+        tag = f"b{b}h{h}t{t}d{d}" + ("c" if causal else "") + (
+            f"w{window}" if window else "")
+        fwd_fl = 4 * b * h * t * t * d * (0.5 if causal else 1.0)
+
+        def attn(q_, k_, v_):
+            return flash_attention(q_, k_, v_, causal=causal, window=window)
+
+        fwd = jax.jit(attn)
+        us = timeit(fwd, q, k, v)
+        emit(f"attn_fwd_{tag}", us, _gflops(fwd_fl, us))
+
+        # Backward alone: residuals are computed once outside the timer.
+        _, f_vjp = jax.vjp(attn, q, k, v)
+        dy = jnp.ones_like(q)
+        bwd = jax.jit(f_vjp)
+        us = timeit(bwd, dy)
+        emit(f"attn_bwd_{tag}", us, _gflops(2.5 * fwd_fl, us))
+
+        train = jax.jit(jax.value_and_grad(
+            lambda q_: (attn(q_, k, v) * v).sum()))
+        us = timeit(train, q)
+        emit(f"attn_train_{tag}", us, _gflops(3.5 * fwd_fl, us))

@@ -21,6 +21,7 @@ CASES = [
     ("matmul", (256, 256, 256)),
     ("conv2d", (28, 128, 128)),          # ResNet-50 28x28 layer row
     ("flash_attention", (128, 128, 64)),
+    ("flash_attention_bwd", (128, 128, 64)),  # the training hot path
 ]
 
 

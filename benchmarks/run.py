@@ -34,20 +34,27 @@ def main() -> None:
     ap.add_argument("--compare-policies", action="store_true",
                     help="run the heuristic-vs-autotune tile comparison "
                          "(pays a measured search per op/shape)")
+    ap.add_argument("--only", default=None, metavar="SUBSTR",
+                    help="run only benchmark modules whose name contains "
+                         "this substring (e.g. --only attention)")
     args = ap.parse_args()
 
     import jax
 
     import repro
-    from benchmarks import (bench_autotune, bench_brgemm,
+    from benchmarks import (bench_attention, bench_autotune, bench_brgemm,
                             bench_conv_resnet50, bench_conv_strategies,
                             bench_distributed_proxy, bench_fc, bench_lstm,
                             common)
 
     mods = [bench_brgemm, bench_conv_strategies, bench_lstm, bench_fc,
-            bench_conv_resnet50, bench_distributed_proxy]
+            bench_conv_resnet50, bench_attention, bench_distributed_proxy]
     if args.compare_policies:
         mods.append(bench_autotune)
+    if args.only:
+        mods = [m for m in mods if args.only in m.__name__]
+        if not mods:
+            ap.error(f"--only {args.only!r} matches no benchmark module")
 
     print("name,us_per_call,derived")
     ok = True

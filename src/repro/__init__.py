@@ -9,8 +9,10 @@ interpret mode) scopes through the context API:
 """
 from repro.core.blocking import (  # noqa: F401
     AttnBlocks,
+    AttnBwdBlocks,
     Blocks,
     ConvBlocks,
+    ConvGeometry,
 )
 from repro.core.dispatch import (  # noqa: F401
     ExecutionContext,

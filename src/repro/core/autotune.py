@@ -61,13 +61,16 @@ STATS = SearchStats()
 # --------------------------------------------------------------------------
 
 def proxy_runner(op: str, m: int, n: int, k: int, dtype, blocks,
-                 interpret: bool) -> Callable[[], object]:
+                 interpret: bool, geometry=None) -> Callable[[], object]:
     """A zero-arg callable executing ``op`` once with ``blocks``.
 
     Conv and attention are measured on a proxy with the same canonical
-    (m, n, k): a 1x1/stride-1 convolution of q output pixels and a
-    non-causal single-head attention — the shapes that exercise the same
-    tile walk the real kernels take.
+    (m, n, k).  With a ``ConvGeometry`` the conv proxy is a true
+    (R, S, stride) convolution producing q output pixels per row — the
+    exact panel walk the real kernel takes — falling back to the 1x1 /
+    stride-1 proxy otherwise.  ``flash_attention_bwd`` runs the forward
+    once outside the timed callable (residuals are inputs, not work) and
+    measures only the fused backward kernels.
     """
     if op in ("matmul", "brgemm", "batched_matmul"):
         from repro.kernels.brgemm import kernel as K
@@ -86,9 +89,11 @@ def proxy_runner(op: str, m: int, n: int, k: int, dtype, blocks,
     if op == "conv2d":
         from repro.kernels.conv2d.kernel import conv2d_pallas
         q, c, kk = m, n, k
-        x = jnp.ones((1, 1, q, c), dtype)
-        w = jnp.ones((1, 1, c, kk), dtype)
-        return lambda: conv2d_pallas(x, w, blocks=blocks,
+        stride, r_, s_ = ((geometry.stride, geometry.r, geometry.s)
+                         if geometry is not None else (1, 1, 1))
+        x = jnp.ones((1, r_, (q - 1) * stride + s_, c), dtype)
+        w = jnp.ones((r_, s_, c, kk), dtype)
+        return lambda: conv2d_pallas(x, w, stride=stride, blocks=blocks,
                                      interpret=interpret)
     if op == "flash_attention":
         from repro.kernels.flash_attention.kernel import (
@@ -99,11 +104,31 @@ def proxy_runner(op: str, m: int, n: int, k: int, dtype, blocks,
         kv = jnp.ones((1, 1, tk, d), dtype)
         return lambda: flash_attention_pallas(
             qq, kv, kv, causal=False, blocks=blocks, interpret=interpret)
+    if op == "flash_attention_bwd":
+        from repro.kernels.flash_attention.bwd import (
+            flash_attention_bwd_pallas,
+        )
+        from repro.kernels.flash_attention.kernel import (
+            flash_attention_pallas,
+        )
+        tq, tk, d = m, n, k
+        qq = jnp.ones((1, 1, tq, d), dtype)
+        kv = jnp.ones((1, 1, tk, d), dtype)
+        y, lse = flash_attention_pallas(
+            qq, kv, kv, causal=False,
+            blocks=blocking.default_blocks("flash_attention", tq, tk, d,
+                                           dtype),
+            interpret=interpret, return_residuals=True)
+        dy = jnp.ones_like(y)
+        return lambda: flash_attention_bwd_pallas(
+            qq, kv, kv, y, lse, dy, causal=False, blocks=blocks,
+            interpret=interpret)
     raise ValueError(f"no autotune runner for op {op!r}")
 
 
 def measure_candidate(op: str, m: int, n: int, k: int, dtype, backend: str,
-                      blocks, repeats: int | None = None) -> float:
+                      blocks, repeats: int | None = None,
+                      geometry=None) -> float:
     """Best-of-``repeats`` wall time (seconds) for one candidate tile.
 
     The first call compiles (or builds the interpreter); only subsequent
@@ -113,7 +138,7 @@ def measure_candidate(op: str, m: int, n: int, k: int, dtype, backend: str,
     repeats = repeats if repeats is not None else int(
         os.environ.get(ENV_REPEATS, DEFAULT_REPEATS))
     fn = proxy_runner(op, m, n, k, dtype, blocks,
-                      dispatch.resolve_interpret())
+                      dispatch.resolve_interpret(), geometry=geometry)
     jax.block_until_ready(fn())  # warmup / compile
     best = float("inf")
     for _ in range(max(1, repeats)):
@@ -138,27 +163,32 @@ def _prune(candidates: Sequence, heuristic, max_candidates: int) -> list:
 
 
 def autotune_blocks(op: str, m: int, n: int, k: int, dtype, backend: str, *,
+                    geometry=None,
                     max_candidates: int | None = None,
                     repeats: int | None = None,
                     timer: Callable | None = None):
     """Measured search over the candidate grid; returns the fastest tile.
 
     ``timer(op, m, n, k, dtype, backend, blocks) -> seconds`` is injectable
-    for tests; the default is :func:`measure_candidate`.  Candidate order is
-    deterministic, ties keep the earlier candidate, and a candidate whose
-    measurement raises is skipped (counted in ``STATS.failed``) — if every
-    candidate fails, the heuristic pick is returned.
+    for tests; the default is :func:`measure_candidate` on the
+    geometry-true proxy.  Candidate order is deterministic, ties keep the
+    earlier candidate, and a candidate whose measurement raises is skipped
+    (counted in ``STATS.failed``) — if every candidate fails, the
+    heuristic pick is returned.
     """
-    heuristic = blocking.default_blocks(op, m, n, k, dtype)
+    heuristic = blocking.default_blocks(op, m, n, k, dtype,
+                                        geometry=geometry)
     if backend != "pallas":
         # Tiling is backend-internal off the pallas path; nothing to measure.
         return heuristic
     max_candidates = max_candidates if max_candidates is not None else int(
         os.environ.get(ENV_MAX_CANDIDATES, DEFAULT_MAX_CANDIDATES))
     if timer is None:
-        timer = functools.partial(measure_candidate, repeats=repeats)
-    candidates = _prune(blocking.candidate_blocks(op, m, n, k, dtype),
-                        heuristic, max_candidates)
+        timer = functools.partial(measure_candidate, repeats=repeats,
+                                  geometry=geometry)
+    candidates = _prune(
+        blocking.candidate_blocks(op, m, n, k, dtype, geometry=geometry),
+        heuristic, max_candidates)
     STATS.searches += 1
     best, best_t = heuristic, float("inf")
     for cand in candidates:

@@ -120,10 +120,56 @@ class AttnBlocks:
         return (self.block_q, self.block_k)
 
 
+@dataclasses.dataclass(frozen=True)
+class AttnBwdBlocks:
+    """Flash-attention *backward* tile: block_q query rows x block_k kv
+    rows per batch-reduce step of the dQ / dK/dV kernels.
+
+    A separate tuple from ``AttnBlocks`` because the backward working set
+    is very different from the forward's (q + dy + lse + delta panels on
+    the q side, k + v panels plus dk/dv accumulators on the kv side), so
+    the autotuner must be free to pick backward tiles independently of the
+    forward winner for the same (tq, tk, d)."""
+    block_q: int
+    block_k: int
+
+    def astuple(self):
+        return (self.block_q, self.block_k)
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvGeometry:
+    """The non-canonical conv2d geometry (stride and filter extent) that
+    shapes the real kernel's working set: the input panel streamed per
+    grid step spans the *strided* output row plus the filter overhang, not
+    the 1x1/stride-1 proxy.  Threaded through ``resolve_blocks`` so the
+    candidate pruning, the autotune proxy problem, and the tuning-cache
+    key all see the geometry the kernel will actually run."""
+    kind = "conv"  # JSON tag (class attribute, not a field)
+    stride: int
+    r: int
+    s: int
+
+    def asdict(self):
+        return {"kind": self.kind, **dataclasses.asdict(self)}
+
+
+def geometry_from_dict(d: dict | None):
+    """Inverse of a geometry tuple's ``asdict`` (None passes through)."""
+    if d is None:
+        return None
+    d = dict(d)
+    cls = _GEOM_KIND_TO_CLS.get(d.pop("kind", None))
+    if cls is None:
+        raise ValueError(f"unknown geometry kind in {d!r}")
+    return cls(**{k: int(v) for k, v in d.items()})
+
+
 def choose_conv_blocks(
-    q: int, c: int, k: int, dtype=jnp.float32
+    q: int, c: int, k: int, dtype=jnp.float32, *, geometry=None
 ) -> ConvBlocks:
     """Static heuristic for conv2d: (q, c, k) = (out pixels/row, C, K)."""
+    del geometry  # the heuristic stays static; candidates/proxy use it
     bq = min(round_up(q, 8), 128)
     bc = min(round_up(c, LANE), LANE)
     bk = min(round_up(k, LANE), LANE)
@@ -138,6 +184,15 @@ def choose_attention_blocks(
     del d
     return AttnBlocks(block_q=min(round_up(tq, 8), 128),
                       block_k=min(round_up(tk, LANE), LANE))
+
+
+def choose_attention_bwd_blocks(
+    tq: int, tk: int, d: int, dtype=jnp.float32
+) -> AttnBwdBlocks:
+    """Static heuristic for the flash-attention backward kernels."""
+    del d
+    return AttnBwdBlocks(block_q=min(round_up(tq, 8), 128),
+                         block_k=min(round_up(tk, LANE), LANE))
 
 
 # --------------------------------------------------------------------------
@@ -184,13 +239,19 @@ def gemm_candidates(
 def conv_candidates(
     q: int, c: int, k: int, dtype=jnp.float32, *,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    geometry: ConvGeometry | None = None,
 ) -> list[ConvBlocks]:
     itemsize = jnp.dtype(dtype).itemsize
+    stride = geometry.stride if geometry is not None else 1
+    s_ = geometry.s if geometry is not None else 1
 
     def working_set(bq, bc, bk):
-        # input row panel (bq * stride columns; stride folded into the
-        # proxy as 1) + weight panel, double buffered, + fp32 accumulator
-        panels = (bq * bc + bc * bk) * itemsize * 2
+        # The kernel streams one full padded input row per grid step:
+        # (qp-1)*stride + (s-1) + stride columns (kernel.py's need_w), so
+        # the panel scales with the *strided problem row*, not just bq.
+        qp = round_up(q, bq)
+        wpad = (qp - 1) * stride + (s_ - 1) + stride
+        panels = (wpad * bc + bc * bk) * itemsize * 2
         return panels + bq * bk * 4 + bq * bk * itemsize * 2
 
     bqs = [b for b in _steps(8, 256) if b <= round_up(q, 8) or b == 8]
@@ -203,7 +264,7 @@ def conv_candidates(
         for bq in bqs for bc in bcs for bk in bks
         if working_set(bq, bc, bk) <= vmem_budget
     ]
-    heur = choose_conv_blocks(q, c, k, dtype)
+    heur = choose_conv_blocks(q, c, k, dtype, geometry=geometry)
     if heur not in cands:
         cands.append(heur)
     return sorted(cands, key=lambda b: b.astuple())
@@ -235,6 +296,36 @@ def attention_candidates(
     return sorted(cands, key=lambda b: b.astuple())
 
 
+def attention_bwd_candidates(
+    tq: int, tk: int, d: int, dtype=jnp.float32, *,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> list[AttnBwdBlocks]:
+    itemsize = jnp.dtype(dtype).itemsize
+    dp = round_up(d, LANE)
+
+    def working_set(bq, bk):
+        # q + dy panels on the q side, k + v on the kv side, all double
+        # buffered; lse + delta stats rows; dq or dk+dv accumulators (the
+        # dk/dv kernel is the larger resident set); scores + ds blocks.
+        panels = (2 * bq * dp + 2 * bk * dp) * itemsize * 2
+        stats = 2 * bq * LANE * 4 * 2
+        accs = 2 * bk * dp * 4 + bq * dp * 4
+        return panels + stats + accs + 2 * bq * bk * 4
+
+    bqs = [b for b in _steps(8, 256) if b <= round_up(tq, 8) or b == 8]
+    bks = [b for b in _steps(LANE, 512)
+           if b <= round_up(tk, LANE) or b == LANE]
+    cands = [
+        AttnBwdBlocks(bq, bk)
+        for bq in bqs for bk in bks
+        if working_set(bq, bk) <= vmem_budget
+    ]
+    heur = choose_attention_bwd_blocks(tq, tk, d, dtype)
+    if heur not in cands:
+        cands.append(heur)
+    return sorted(cands, key=lambda b: b.astuple())
+
+
 # --------------------------------------------------------------------------
 # per-op schema: one resolution surface for every block tuple
 # --------------------------------------------------------------------------
@@ -247,6 +338,7 @@ class BlockSchema:
     dims: tuple[str, str, str]   # what (m, n, k) mean for this op
     heuristic: Callable          # (m, n, k, dtype) -> block tuple
     candidates: Callable         # (m, n, k, dtype) -> [block tuple]
+    geometry_cls: type | None = None  # non-canonical-dims tuple, if any
 
 
 _GEMM_SCHEMA = BlockSchema(
@@ -259,10 +351,15 @@ BLOCK_SCHEMAS: dict[str, BlockSchema] = {
     "batched_matmul": _GEMM_SCHEMA,
     "conv2d": BlockSchema(
         kind="conv", cls=ConvBlocks, dims=("q", "c", "k"),
-        heuristic=choose_conv_blocks, candidates=conv_candidates),
+        heuristic=choose_conv_blocks, candidates=conv_candidates,
+        geometry_cls=ConvGeometry),
     "flash_attention": BlockSchema(
         kind="attn", cls=AttnBlocks, dims=("tq", "tk", "d"),
         heuristic=choose_attention_blocks, candidates=attention_candidates),
+    "flash_attention_bwd": BlockSchema(
+        kind="attn_bwd", cls=AttnBwdBlocks, dims=("tq", "tk", "d"),
+        heuristic=choose_attention_bwd_blocks,
+        candidates=attention_bwd_candidates),
 }
 
 
@@ -275,17 +372,28 @@ def schema_for(op: str) -> BlockSchema:
     return schema
 
 
-def default_blocks(op: str, m: int, n: int, k: int, dtype=jnp.float32):
+def default_blocks(op: str, m: int, n: int, k: int, dtype=jnp.float32, *,
+                   geometry=None):
     """The static heuristic pick for ``op`` in its own block tuple type."""
-    return schema_for(op).heuristic(m, n, k, dtype)
+    schema = schema_for(op)
+    if geometry is not None and schema.geometry_cls is not None:
+        return schema.heuristic(m, n, k, dtype, geometry=geometry)
+    return schema.heuristic(m, n, k, dtype)
 
 
-def candidate_blocks(op: str, m: int, n: int, k: int, dtype=jnp.float32):
+def candidate_blocks(op: str, m: int, n: int, k: int, dtype=jnp.float32, *,
+                     geometry=None):
     """Deterministically ordered VMEM-feasible candidate tiles for ``op``."""
-    return schema_for(op).candidates(m, n, k, dtype)
+    schema = schema_for(op)
+    if geometry is not None and schema.geometry_cls is not None:
+        return schema.candidates(m, n, k, dtype, geometry=geometry)
+    return schema.candidates(m, n, k, dtype)
 
 
 _KIND_TO_CLS = {s.kind: s.cls for s in BLOCK_SCHEMAS.values()}
+_GEOM_KIND_TO_CLS = {s.geometry_cls.kind: s.geometry_cls
+                     for s in BLOCK_SCHEMAS.values()
+                     if s.geometry_cls is not None}
 
 
 def blocks_to_dict(blocks) -> dict:

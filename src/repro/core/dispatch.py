@@ -39,6 +39,7 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import dataclasses
+import inspect
 import json
 import os
 import threading
@@ -53,6 +54,7 @@ from repro.core.blocking import (
     blocks_from_dict,
     blocks_to_dict,
     default_blocks,
+    geometry_from_dict,
 )
 
 ENV_VAR = "REPRO_BACKEND"
@@ -308,8 +310,22 @@ def register_block_policy(name: str, fn: Callable) -> None:
 
 
 register_block_policy(
-    "heuristic", lambda op, m, n, k, dtype, backend: default_blocks(
-        op, m, n, k, dtype))
+    "heuristic",
+    lambda op, m, n, k, dtype, backend, geometry=None: default_blocks(
+        op, m, n, k, dtype, geometry=geometry))
+
+
+def _accepts_geometry(fn: Callable) -> bool:
+    """Whether a policy callable takes the optional ``geometry=`` kwarg.
+
+    Pre-geometry policies keep their 6-arg signature working: they are
+    simply called without it (and tune the geometry-agnostic proxy)."""
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):  # pragma: no cover - builtins etc.
+        return False
+    return "geometry" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
 
 
 def _policy_fn(name: str) -> Callable:
@@ -327,15 +343,19 @@ def _policy_fn(name: str) -> Callable:
 
 
 def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
-                   blocks=None):
+                   blocks=None, geometry=None):
     """Block geometry for ``op``: call arg > context policy > heuristic.
 
     ``(m, n, k)`` is the op's canonical tuning triple (GEMM ``m/n/k``, conv
-    ``q/c/k``, attention ``tq/tk/d`` — see ``blocking.BLOCK_SCHEMAS``).
-    Policy results are memoized keyed (op, backend, shapes, dtype, policy);
-    an explicit ``blocks`` argument bypasses the cache entirely.  When
-    ``REPRO_TUNING_CACHE`` names a file, the cache is loaded from it on
-    first use and written through on every new entry.
+    ``q/c/k``, attention fwd/bwd ``tq/tk/d`` — see
+    ``blocking.BLOCK_SCHEMAS``).  ``geometry`` carries op-specific
+    non-canonical dims (conv2d's ``ConvGeometry(stride, r, s)``) so the
+    policy can prune and measure the true working set; it joins the cache
+    key, so the same (m, n, k) with different geometry tunes separately.
+    Policy results are memoized keyed (op, backend, shapes, dtype, policy,
+    geometry); an explicit ``blocks`` argument bypasses the cache entirely.
+    When ``REPRO_TUNING_CACHE`` names a file, the cache is loaded from it
+    on first use and written through on every new entry.
     """
     if blocks is not None:
         return blocks
@@ -348,10 +368,13 @@ def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
     else:
         policy_fn, policy_key = _policy_fn(policy), policy
     key = (op, backend, int(m), int(n), int(k), jnp.dtype(dtype).name,
-           policy_key)
+           policy_key, geometry)
     hit = _TUNING_CACHE.get(key)
     if hit is None:
-        hit = policy_fn(op, m, n, k, dtype, backend)
+        if geometry is not None and _accepts_geometry(policy_fn):
+            hit = policy_fn(op, m, n, k, dtype, backend, geometry=geometry)
+        else:
+            hit = policy_fn(op, m, n, k, dtype, backend)
         with _TUNING_LOCK:
             _TUNING_CACHE[key] = hit
         env_path = os.environ.get(TUNING_CACHE_ENV)
@@ -381,8 +404,10 @@ def _maybe_load_env_cache() -> None:
 
 
 def _entry_key(e: dict) -> tuple:
+    geom = e.get("geometry")
     return (e["op"], e["backend"], int(e["m"]), int(e["n"]), int(e["k"]),
-            e["dtype"], e["policy"], e.get("platform"))
+            e["dtype"], e["policy"], e.get("platform"),
+            tuple(sorted(geom.items())) if geom else None)
 
 
 def save_cache(path: str | None = None) -> int:
@@ -405,8 +430,9 @@ def save_cache(path: str | None = None) -> int:
         entries = [
             {"op": op, "backend": backend, "m": m, "n": n, "k": k,
              "dtype": dtype, "policy": policy, "platform": platform,
+             "geometry": geometry.asdict() if geometry is not None else None,
              "blocks": blocks_to_dict(blk)}
-            for (op, backend, m, n, k, dtype, policy), blk
+            for (op, backend, m, n, k, dtype, policy, geometry), blk
             in _TUNING_CACHE.items()
             if isinstance(policy, str)
         ]
@@ -442,10 +468,18 @@ def load_cache(path: str | None = None) -> int:
         for e in data.get("entries", ()):
             if e.get("platform", platform) != platform:
                 continue
-            key = (e["op"], e["backend"], int(e["m"]), int(e["n"]),
-                   int(e["k"]), e["dtype"], e["policy"])
+            try:
+                key = (e["op"], e["backend"], int(e["m"]), int(e["n"]),
+                       int(e["k"]), e["dtype"], e["policy"],
+                       geometry_from_dict(e.get("geometry")))
+                blk = blocks_from_dict(e["blocks"])
+            except (KeyError, TypeError, ValueError):
+                # Entry written by another repo version (unknown block or
+                # geometry kind): skip it rather than fail the whole load;
+                # save_cache preserves it in the file untouched.
+                continue
             if key not in _TUNING_CACHE:
-                _TUNING_CACHE[key] = blocks_from_dict(e["blocks"])
+                _TUNING_CACHE[key] = blk
                 count += 1
     return count
 

@@ -13,4 +13,7 @@ from repro.kernels.brgemm.ops import (  # noqa: F401
     matmul,
 )
 from repro.kernels.conv2d.ops import conv2d  # noqa: F401
-from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.kernels.flash_attention.ops import (  # noqa: F401
+    flash_attention,
+    flash_attention_bwd,
+)

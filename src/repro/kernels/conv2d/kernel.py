@@ -31,7 +31,7 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.core import dispatch
 from repro.core import pallas_compat as _pc
 from repro.core import fusion
-from repro.core.blocking import ConvBlocks, round_up
+from repro.core.blocking import ConvBlocks, ConvGeometry, round_up
 
 
 @functools.partial(
@@ -68,7 +68,8 @@ def conv2d_pallas(
     q = (wi + 2 * padding - s_) // stride + 1
 
     blk = blocks or dispatch.resolve_blocks(
-        "conv2d", q, c, k, x.dtype, backend="pallas")
+        "conv2d", q, c, k, x.dtype, backend="pallas",
+        geometry=ConvGeometry(stride, r_, s_))
     bq = min(round_up(q, 8), blk.bq)
     bc = min(round_up(c, 128), blk.bc)
     bk = min(round_up(k, 128), blk.bk)

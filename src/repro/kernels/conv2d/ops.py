@@ -19,7 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import dispatch, fusion
-from repro.core.blocking import ConvBlocks
+from repro.core.blocking import ConvBlocks, ConvGeometry
 from repro.kernels.brgemm import kernel as BK
 from repro.kernels.conv2d import ref as R
 from repro.kernels.conv2d.kernel import conv2d_pallas
@@ -123,7 +123,8 @@ def _conv2d_pallas_backend(x, w, bias, *, stride, padding, activation,
     r_, s_, _, k = w.shape
     q = (wi + 2 * padding - s_) // stride + 1
     blk = dispatch.resolve_blocks("conv2d", q, c, k, x.dtype,
-                                  backend="pallas", blocks=blocks)
+                                  backend="pallas", blocks=blocks,
+                                  geometry=ConvGeometry(stride, r_, s_))
     cfg = _Cfg(stride, padding, activation, out_dtype, blk,
                dispatch.resolve_interpret(), dispatch.resolve_accum_dtype())
     return _conv_p(cfg, x, w, bias)

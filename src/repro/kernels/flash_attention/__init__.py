@@ -1,2 +1,5 @@
-from repro.core.blocking import AttnBlocks  # noqa: F401
-from repro.kernels.flash_attention.ops import flash_attention  # noqa: F401
+from repro.core.blocking import AttnBlocks, AttnBwdBlocks  # noqa: F401
+from repro.kernels.flash_attention.ops import (  # noqa: F401
+    flash_attention,
+    flash_attention_bwd,
+)

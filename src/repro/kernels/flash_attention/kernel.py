@@ -32,7 +32,7 @@ STATS_LANES = 128
 @functools.partial(
     jax.jit,
     static_argnames=("causal", "window", "scale", "blocks", "interpret",
-                     "acc_dtype"),
+                     "acc_dtype", "return_residuals"),
 )
 def flash_attention_pallas(
     q,
@@ -45,6 +45,7 @@ def flash_attention_pallas(
     blocks: AttnBlocks | None = None,
     interpret: bool = False,
     acc_dtype=jnp.float32,
+    return_residuals: bool = False,
 ):
     """q: (B, Hq, Tq, d); k, v: (B, Hkv, Tk, d) -> (B, Hq, Tq, d).
 
@@ -53,6 +54,12 @@ def flash_attention_pallas(
     policy — the kernel itself makes no geometry choices.  The running
     softmax statistics (m, l) always stay fp32; ``acc_dtype`` governs the
     output accumulator only.
+
+    With ``return_residuals=True`` the kernel additionally emits the
+    per-row log-sum-exp statistics ``lse = m + log(l)`` (fp32,
+    (B, Hq, Tq)) — the VJP residual that lets the fused backward kernels
+    rebuild the softmax blocks without re-running the online reduction.
+    Fully-masked rows get ``lse = NEG_INF`` (log-sum-exp of an empty set).
     """
     b, hq, tq, d = q.shape
     _, hkv, tk, _ = k.shape
@@ -74,7 +81,11 @@ def flash_attention_pallas(
     grid = (b, hq, tqp // bq, tkp // bk)
     nkv = tkp // bk
 
-    def body(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref):
+    def body(q_ref, k_ref, v_ref, o_ref, *rest):
+        if return_residuals:
+            lse_ref, acc_ref, m_ref, l_ref = rest
+        else:
+            lse_ref, (acc_ref, m_ref, l_ref) = None, rest
         j = pl.program_id(3)
 
         @pl.when(j == 0)
@@ -129,23 +140,36 @@ def flash_attention_pallas(
         @pl.when(j == nkv - 1)
         def _():
             l = l_ref[:, :1]
-            l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 output
+            lsafe = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows -> 0 out
             o_ref[...] = (acc_ref[...].astype(jnp.float32)
-                          / l).astype(o_ref.dtype)[None, None]
+                          / lsafe).astype(o_ref.dtype)[None, None]
+            if lse_ref is not None:
+                lse = jnp.where(l > 0.0, m_ref[:, :1] + jnp.log(lsafe),
+                                NEG_INF)
+                lse_ref[...] = jnp.broadcast_to(
+                    lse, lse_ref.shape[2:])[None, None]
 
-    out = pl.pallas_call(
+    q_spec = pl.BlockSpec((1, 1, bq, dp), lambda b_, h, i, j: (b_, h, i, 0))
+    out_specs = [q_spec]
+    out_shape = [jax.ShapeDtypeStruct((b, hq, tqp, dp), q.dtype)]
+    if return_residuals:
+        out_specs.append(pl.BlockSpec((1, 1, bq, STATS_LANES),
+                                      lambda b_, h, i, j: (b_, h, i, 0)))
+        out_shape.append(
+            jax.ShapeDtypeStruct((b, hq, tqp, STATS_LANES), jnp.float32))
+
+    outs = pl.pallas_call(
         body,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, bq, dp), lambda b_, h, i, j: (b_, h, i, 0)),
+            q_spec,
             pl.BlockSpec((1, 1, bk, dp),
                          lambda b_, h, i, j: (b_, h // group, j, 0)),
             pl.BlockSpec((1, 1, bk, dp),
                          lambda b_, h, i, j: (b_, h // group, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, dp),
-                               lambda b_, h, i, j: (b_, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, hq, tqp, dp), q.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((bq, dp), acc_dtype),
             pltpu.VMEM((bq, STATS_LANES), jnp.float32),
@@ -157,4 +181,7 @@ def flash_attention_pallas(
         ),
         interpret=interpret,
     )(qp, kp, vp)
-    return out[:, :, :tq, :d]
+    out = outs[0][:, :, :tq, :d]
+    if return_residuals:
+        return out, outs[1][:, :, :tq, 0]
+    return out

@@ -27,10 +27,14 @@ def make_train_step(cfg: ArchCfg, ocfg: opt.AdamWCfg, *,
                     accum_dtype=None):
     """Returns train_step(state, batch) -> (state, metrics).
 
-    ``blocks_policy``/``accum_dtype`` scope the whole step's kernels
-    (e.g. ``blocks_policy="autotune"`` tunes every GEMM/conv/attention tile
-    at first trace; ``accum_dtype=jnp.bfloat16`` trades accumulator
-    precision for VMEM headroom)."""
+    ``blocks_policy``/``accum_dtype`` scope the whole step's kernels —
+    forward *and* backward: the context wraps the full value_and_grad, so
+    the conv dgrad/wgrad duals and the fused flash-attention backward
+    (its ``flash_attention_bwd`` tile, resolved at backward trace time)
+    tune under the same policy (e.g. ``blocks_policy="autotune"``
+    measures every GEMM/conv/attention fwd+bwd tile at first trace;
+    ``accum_dtype=jnp.bfloat16`` trades accumulator precision for VMEM
+    headroom)."""
 
     def loss_of(params, batch):
         return api.loss_fn(params, batch, cfg)

@@ -16,7 +16,7 @@ from repro.kernels.conv2d import conv2d
 from repro.kernels.flash_attention import flash_attention
 
 ALL_OPS = ("matmul", "brgemm", "batched_matmul", "conv2d",
-           "flash_attention")
+           "flash_attention", "flash_attention_bwd")
 
 
 def _randn(*shape, dtype=jnp.float32, seed=0):
@@ -152,6 +152,18 @@ def _run_op(op):
     if op == "flash_attention":
         return flash_attention(_randn(1, 2, 32, 16), _randn(1, 2, 32, 16),
                                _randn(1, 2, 32, 16), causal=True)
+    if op == "flash_attention_bwd":
+        from repro.kernels.flash_attention import flash_attention_bwd
+        from repro.kernels.flash_attention.kernel import (
+            flash_attention_pallas,
+        )
+        q = _randn(1, 2, 32, 16, seed=5)
+        k = _randn(1, 2, 32, 16, seed=6)
+        v = _randn(1, 2, 32, 16, seed=7)
+        y, lse = flash_attention_pallas(q, k, v, causal=True, interpret=True,
+                                        return_residuals=True)
+        dy = _randn(1, 2, 32, 16, seed=8)
+        return flash_attention_bwd(q, k, v, y, lse, dy, causal=True)
     raise AssertionError(op)
 
 
