@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV lines.  Mapping to the paper:
   fig9_*   Figure 9  fully-connected layers
   fig10_*  Figure 10 distributed-scaling proxy (collective footprint)
   tune_*   heuristic vs measured-autotune tiles (``--compare-policies``)
+  serve_*  continuous-batching vs static-batching serving throughput
 
 ``--json out.json`` additionally persists every record (plus platform /
 dispatch metadata) so the BENCH_*.json perf trajectory can be diffed
@@ -45,10 +46,11 @@ def main() -> None:
     from benchmarks import (bench_attention, bench_autotune, bench_brgemm,
                             bench_conv_resnet50, bench_conv_strategies,
                             bench_distributed_proxy, bench_fc, bench_lstm,
-                            common)
+                            bench_serving, common)
 
     mods = [bench_brgemm, bench_conv_strategies, bench_lstm, bench_fc,
-            bench_conv_resnet50, bench_attention, bench_distributed_proxy]
+            bench_conv_resnet50, bench_attention, bench_distributed_proxy,
+            bench_serving]
     if args.compare_policies:
         mods.append(bench_autotune)
     if args.only:

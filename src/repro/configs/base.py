@@ -48,6 +48,8 @@ class ArchCfg:
     n_enc_layers: int = 0
     # --- VLM ---
     n_patches: int = 0             # vision-stub prefix length
+    # --- serving ---
+    eos_token: Optional[int] = None  # default stop token for generation
     # --- FFN flavour ---
     gated_mlp: bool = True         # SwiGLU-style (3 mats) vs plain (2 mats)
     mlp_activation: str = "silu"

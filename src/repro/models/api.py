@@ -48,6 +48,70 @@ def decode_step(params, tokens, cfg: ArchCfg, cache, pos, **kw):
 
 
 # --------------------------------------------------------------------------
+# slot-indexed decode (continuous batching)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ArchCfg, batch: int, max_len: int, src_len: int = 0):
+    """Serve cache for either module (``src_len`` only used by enc-dec)."""
+    if is_encdec(cfg):
+        return encdec.init_cache(cfg, batch, max_len, src_len)
+    return transformer.init_cache(cfg, batch, max_len)
+
+
+def cache_batch_axes(cfg: ArchCfg, max_len: int, src_len: int = 0):
+    """Per-leaf batch-axis tree for the serve cache.
+
+    The cache pytree mixes leaves whose batch dimension sits at different
+    positions (layer-stacked KV leaves carry it at axis 1, grouped
+    recurrent states at axis 2, ...).  Rather than hard-coding the layout
+    per architecture family, diff the abstract shapes of a batch-1 and a
+    batch-2 cache: the single axis whose extent changed is the batch axis.
+    The result matches the cache tree structure, so it can be passed
+    directly as a ``vmap`` in/out axes tree.
+    """
+    one = jax.eval_shape(lambda: init_cache(cfg, 1, max_len, src_len))
+    two = jax.eval_shape(lambda: init_cache(cfg, 2, max_len, src_len))
+
+    def axis(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"ambiguous batch axis for cache leaf {a.shape}: {diffs}")
+        return diffs[0]
+
+    return jax.tree.map(axis, one, two)
+
+
+def decode_step_slots(params, tokens, cfg: ArchCfg, cache, positions, *,
+                      batch_axes, **kw):
+    """One decode step over a slot pool with per-slot positions.
+
+    ``tokens``: (S, 1) int32 — last sampled token per slot; ``positions``:
+    (S,) int32 — the absolute position each slot's token is written at;
+    ``cache``: a slot pool (batch dimension = S); ``batch_axes``: the tree
+    from :func:`cache_batch_axes`.  Returns (logits (S, V), new cache).
+
+    Implemented as a vmap of the ordinary batch-1 ``decode_step`` over the
+    slot dimension, so every architecture family's decode path (padded KV,
+    ring buffers, compressed MLA caches, recurrent states) gets per-slot
+    position/length semantics without per-family code: cache writes become
+    scatters and the kv-length masks become per-slot masks under the
+    batching rules.  Free slots decode garbage that is never read — their
+    writes land at positions a later prefill/decode overwrites before any
+    attention mask exposes them.
+    """
+    def one(tok, c, pos):
+        c = jax.tree.map(lambda x, a: jnp.expand_dims(x, a), c, batch_axes)
+        logits, c = decode_step(params, tok[None, :], cfg, c, pos, **kw)
+        c = jax.tree.map(lambda x, a: jnp.squeeze(x, a), c, batch_axes)
+        return logits[0], c
+
+    return jax.vmap(one, in_axes=(0, batch_axes, 0),
+                    out_axes=(0, batch_axes))(tokens, cache, positions)
+
+
+# --------------------------------------------------------------------------
 # shape bookkeeping
 # --------------------------------------------------------------------------
 

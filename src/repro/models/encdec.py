@@ -202,8 +202,12 @@ def init_cache(cfg: ArchCfg, batch: int, max_len: int, src_len: int):
             "cross": _stack_tree(cross, cfg.n_layers)}
 
 
-def prefill(params, batch, cfg: ArchCfg, cache, *, backend=None):
-    """Encode src, cache cross-KV, prefill decoder self-attn cache."""
+def prefill(params, batch, cfg: ArchCfg, cache, *, backend=None,
+            logit_pos=None):
+    """Encode src, cache cross-KV, prefill decoder self-attn cache.
+
+    ``logit_pos`` (traced int) selects which decoder position's logits to
+    return instead of the last one (bucketed right-padded prefill)."""
     memory = encode(params, batch["src_embeds"], cfg, backend=backend)
     x = embeddings.encode(params["embed"], batch["tokens"]).astype(_dt(cfg))
 
@@ -221,7 +225,11 @@ def prefill(params, batch, cfg: ArchCfg, cache, *, backend=None):
         body, x, (params["dec_blocks"],
                   {"self": cache["self"], "cross": cache["cross"]}),
         unroll=cfg.scan_unroll)
-    logits = _head(params, x[:, -1:], cfg)
+    if logit_pos is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(x, logit_pos, 1, axis=1)
+    logits = _head(params, x_last, cfg)
     return logits[:, 0], new_cache
 
 

@@ -415,12 +415,23 @@ def loss_fn(params, batch, cfg: ArchCfg, *, backend=None):
     return loss, metrics
 
 
-def prefill(params, batch, cfg: ArchCfg, cache, *, backend=None):
-    """Returns (last-token logits, updated cache)."""
+def prefill(params, batch, cfg: ArchCfg, cache, *, backend=None,
+            logit_pos=None):
+    """Returns (last-token logits, updated cache).
+
+    ``logit_pos`` (traced int, index into the hidden sequence including any
+    patch prefix) selects which position's logits to return instead of the
+    last one — used by bucketed prefill, where prompts are right-padded and
+    the true last token sits before the pad.
+    """
     h = _embed_inputs(params, batch, cfg)
     h, _, cache = _run_stacks(params, h, cfg, mode="prefill", caches=cache,
                               pos=0, backend=backend)
-    logits = _head(params, h[:, -1:], cfg)
+    if logit_pos is None:
+        h_last = h[:, -1:]
+    else:
+        h_last = jax.lax.dynamic_slice_in_dim(h, logit_pos, 1, axis=1)
+    logits = _head(params, h_last, cfg)
     return logits[:, 0], cache
 
 

@@ -1,0 +1,11 @@
+"""Serving runtime: static reference engine + continuous batching."""
+from repro.serve.engine import (  # noqa: F401
+    ContinuousEngine,
+    Engine,
+    PoolConfig,
+    ServeConfig,
+    completed_lengths,
+)
+from repro.serve.kv_cache import SlotKVCache  # noqa: F401
+from repro.serve.metrics import ServeMetrics  # noqa: F401
+from repro.serve.scheduler import Request, RequestState, Scheduler  # noqa: F401

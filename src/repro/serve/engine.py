@@ -1,21 +1,55 @@
-"""Batched serving engine: prefill + greedy/temperature decode loop.
+"""Serving engines: static batch (reference) and continuous batching.
 
-Tracks the absolute-position offset introduced by modality prefixes (VLM
-patches) and drives the jit-compiled prefill/decode_step entry points.  The
-decode loop is a host loop (one jit call per token), matching the
-decode_32k/long_500k shape semantics: one new token against a standing
-cache/state.
+``Engine`` is the original static-batch path: prefill one fixed batch, then
+host-loop decode.  It stays as the semantic reference — ``ContinuousEngine``
+must match its greedy outputs token-for-token.
+
+``ContinuousEngine`` is the production loop around the tuned kernels: a
+slotted KV-cache pool (``serve.kv_cache``), an admission + step scheduler
+(``serve.scheduler``), and two jit entry points — per-request prefill and a
+single batched decode step over the full slot dimension with per-slot
+positions (``api.decode_step_slots``).  Requests join mid-stream as slots
+free up, so decode batches stay full and a single long request no longer
+stalls the batch.
+
+Both engines scope their serving tier (backend, block policy, accumulation
+dtype, interpret mode) through ``dispatch.use``: the context is captured at
+trace time, so each jit entry point re-enters the engine's context when it
+traces.  Two engines at different tiers resolve tuned blocks independently;
+with ``blocks_policy="autotune"`` the first trace pays the measured search
+(or reads the persisted ``REPRO_TUNING_CACHE``) and every later request
+reuses the winners.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchCfg
 from repro.core import dispatch
-from repro.models import api, encdec, transformer
+from repro.models import api
+from repro.serve.kv_cache import SlotKVCache
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import Request, RequestState, Scheduler
+
+
+def completed_lengths(ids, stop_tokens) -> np.ndarray:
+    """Per-row generated length of a (B, T) id array: index of the first
+    stop token + 1 (the stop token is part of the output), else T."""
+    arr = np.asarray(ids)
+    lens = np.full(arr.shape[0], arr.shape[1], np.int64)
+    stops = list(stop_tokens)
+    if not stops:
+        return lens
+    for b in range(arr.shape[0]):
+        hits = np.nonzero(np.isin(arr[b], stops))[0]
+        if hits.size:
+            lens[b] = hits[0] + 1
+    return lens
 
 
 @dataclasses.dataclass
@@ -36,12 +70,6 @@ class Engine:
         self.blocks_policy = blocks_policy
         self.accum_dtype = accum_dtype
 
-        # The engine's serving tier (backend, block policy, accumulation
-        # dtype) scopes through the execution context; it is captured at
-        # trace time, so each jit entry point re-enters the engine's
-        # context when it traces.  With blocks_policy="autotune" the first
-        # trace pays the measured search (or reads the persisted
-        # REPRO_TUNING_CACHE) and every later request reuses the winners.
         def _prefill(p, b, c):
             with dispatch.use(backend=self.backend,
                               blocks_policy=self.blocks_policy,
@@ -58,11 +86,8 @@ class Engine:
         self._decode = jax.jit(_decode)
 
     def _init_cache(self, batch_size: int):
-        if api.is_encdec(self.cfg):
-            return encdec.init_cache(self.cfg, batch_size,
-                                     self.scfg.max_len, self.scfg.src_len)
-        return transformer.init_cache(self.cfg, batch_size,
-                                      self.scfg.max_len)
+        return api.init_cache(self.cfg, batch_size, self.scfg.max_len,
+                              self.scfg.src_len)
 
     def _sample(self, logits, key):
         if self.scfg.temperature <= 0.0:
@@ -70,9 +95,21 @@ class Engine:
         return jax.random.categorical(
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
 
-    def generate(self, batch, *, n_tokens: int, key=None):
-        """batch: prefill inputs. Returns (B, n_tokens) generated ids."""
+    def generate(self, batch, *, n_tokens: int, key=None, stop_tokens=None):
+        """batch: prefill inputs. Returns (B, T) generated ids, T <= n_tokens.
+
+        ``stop_tokens=None`` defaults to ``(cfg.eos_token,)`` when the
+        config defines one (pass ``()`` to disable).  With stop tokens, the
+        loop ends as soon as every row has emitted one, so T can be shorter
+        than ``n_tokens``; rows that finish early keep decoding
+        (deterministically) until the slowest row is done — use
+        :func:`completed_lengths` to truncate per row.
+        """
         key = key if key is not None else jax.random.PRNGKey(0)
+        if stop_tokens is None:
+            stop_tokens = ((self.cfg.eos_token,)
+                           if self.cfg.eos_token is not None else ())
+        stops = tuple(stop_tokens)
         b = batch["tokens"].shape[0]
         prompt_len = batch["tokens"].shape[1]
         pos_off = (self.cfg.n_patches or 0) if not api.is_encdec(
@@ -81,14 +118,281 @@ class Engine:
         cache = self._init_cache(b)
         logits, cache = self._prefill(self.params, batch, cache)
         out = []
-        tok = self._sample(logits, key)
+        # Split before the first sample: sampling with `key` itself and then
+        # splitting the same key would correlate the first two steps.
+        key, sub = jax.random.split(key)
+        tok = self._sample(logits, sub)
         out.append(tok)
+        finished = np.isin(np.asarray(tok), stops) if stops else None
         pos = prompt_len + pos_off
-        for i in range(n_tokens - 1):
+        for _ in range(n_tokens - 1):
+            if stops and finished.all():
+                break
             key, sub = jax.random.split(key)
             logits, cache = self._decode(self.params, tok[:, None], cache,
                                          jnp.int32(pos))
             tok = self._sample(logits, sub)
             out.append(tok)
+            if stops:
+                finished |= np.isin(np.asarray(tok), stops)
             pos += 1
         return jnp.stack(out, axis=1)
+
+
+# ==========================================================================
+# continuous batching
+# ==========================================================================
+
+@dataclasses.dataclass
+class PoolConfig:
+    """Slot pool sizing + prefill shaping.
+
+    ``n_slots`` bounds concurrent requests (decode cost is O(n_slots) every
+    step, so size it to the target batch).  ``max_len`` bounds
+    prompt + generated tokens per slot.  ``prefill_bucket`` rounds prompt
+    lengths up to a multiple (right-padding) so distinct prompt lengths
+    share prefill compilations; only valid for architectures where pad
+    tokens cannot perturb real ones (full causal attention, no capacity-
+    routed MoE, no recurrence): plain dense decoders and enc-dec.
+    """
+    n_slots: int
+    max_len: int
+    src_len: int = 0
+    prefill_bucket: int | None = None
+
+
+def _supports_bucketing(cfg: ArchCfg) -> bool:
+    return (cfg.block in ("dense", "encdec") and not cfg.window
+            and not cfg.n_patches)
+
+
+def _sample_tokens(logits, temps, top_k, key):
+    """Vectorized per-slot sampling: greedy where temp==0, else categorical
+    at that slot's temperature, optionally top-k filtered (top_k==0: off)."""
+    logits = logits.astype(jnp.float32)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    v = logits.shape[-1]
+    sorted_desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    kth = jnp.clip(top_k, 1, v) - 1
+    thresh = jnp.take_along_axis(sorted_desc, kth[:, None], axis=-1)
+    masked = jnp.where((top_k[:, None] > 0) & (logits < thresh),
+                       -jnp.inf, logits)
+    t = jnp.where(temps > 0, temps, 1.0)
+    samp = jax.random.categorical(key, masked / t[:, None],
+                                  axis=-1).astype(jnp.int32)
+    return jnp.where(temps > 0, samp, greedy)
+
+
+def _as_batch1(x, name: str):
+    if x is None:
+        raise ValueError(f"request requires {name} for this architecture")
+    x = jnp.asarray(x)
+    return x if x.ndim == 3 else x[None]
+
+
+class ContinuousEngine:
+    """Continuous-batching engine: ``submit() + step()`` or ``serve()``.
+
+    Each step admits waiting requests into free KV-cache slots (prefill +
+    first token), runs one batched decode step over the full slot pool with
+    per-slot positions, and evicts finished requests the same step.  Greedy
+    outputs match the static ``Engine`` token-for-token.
+    """
+
+    def __init__(self, cfg: ArchCfg, params, pool: PoolConfig, *,
+                 backend: str | None = None, blocks_policy=None,
+                 accum_dtype=None, interpret: bool | None = None,
+                 priority_fn=None, key=None):
+        if pool.prefill_bucket is not None and not _supports_bucketing(cfg):
+            raise ValueError(
+                f"prefill_bucket is not supported for block={cfg.block!r} "
+                f"(window={cfg.window}, n_patches={cfg.n_patches}): pad "
+                "tokens could perturb real ones")
+        self.cfg = cfg
+        self.params = params
+        self.pool_cfg = pool
+        self.pool = SlotKVCache(cfg, pool.n_slots, pool.max_len,
+                                src_len=pool.src_len)
+        self.scheduler = Scheduler(priority_fn=priority_fn)
+        self.metrics = ServeMetrics()
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self._pos_off = (cfg.n_patches or 0) if not api.is_encdec(cfg) else 0
+        # Host-side per-slot sampling state, fed into the jit entries each
+        # step; free slots hold zeros and decode as ignored garbage.
+        self._tokens = np.zeros(pool.n_slots, np.int32)
+        self._temps = np.zeros(pool.n_slots, np.float32)
+        self._topk = np.zeros(pool.n_slots, np.int32)
+
+        tier = dict(backend=backend, blocks_policy=blocks_policy,
+                    accum_dtype=accum_dtype, interpret=interpret)
+        batch_axes = self.pool.batch_axes
+
+        def _prefill(p, batch, cache, logit_pos):
+            with dispatch.use(**tier):
+                return api.prefill(p, batch, cfg, cache,
+                                   logit_pos=logit_pos)
+
+        def _decode(p, tokens, cache, positions):
+            with dispatch.use(**tier):
+                return api.decode_step_slots(p, tokens, cfg, cache,
+                                             positions,
+                                             batch_axes=batch_axes)
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode)
+        self._sample = jax.jit(_sample_tokens)
+        # greedy fast path: skips the sort/categorical work (and its
+        # dispatch cost) when no active slot samples
+        self._greedy = jax.jit(
+            lambda logits: jnp.argmax(logits, axis=-1).astype(jnp.int32))
+
+    # ---------------- request lifecycle ----------------
+
+    def submit(self, request: Request) -> int:
+        """Queue a request; returns its id (see ``scheduler.finished``)."""
+        n_prompt = len(request.prompt)
+        if n_prompt < 1:
+            raise ValueError("empty prompt")
+        need = self._pos_off + n_prompt + request.max_tokens
+        if need > self.pool_cfg.max_len:
+            raise ValueError(
+                f"prompt ({n_prompt}) + max_tokens ({request.max_tokens}) "
+                f"exceeds pool max_len ({self.pool_cfg.max_len})")
+        stops = request.stop_tokens
+        if stops is None:
+            stops = ((self.cfg.eos_token,)
+                     if self.cfg.eos_token is not None else ())
+        self.metrics.requests_submitted += 1
+        return self.scheduler.submit(request, stop_tokens=tuple(stops),
+                                     step=self.metrics.steps)
+
+    def _prompt_batch(self, request: Request):
+        """(batch dict, logit_pos) for one request's prefill, optionally
+        right-padded to the prefill bucket."""
+        prompt = np.asarray(request.prompt, np.int32)
+        n = len(prompt)
+        pad_to = n
+        bucket = self.pool_cfg.prefill_bucket
+        if bucket:
+            pad_to = min(self.pool_cfg.max_len, -(-n // bucket) * bucket)
+        tokens = np.zeros((1, pad_to), np.int32)
+        tokens[0, :n] = prompt
+        batch = {"tokens": jnp.asarray(tokens)}
+        if api.is_encdec(self.cfg):
+            src = _as_batch1(request.src_embeds, "src_embeds")
+            if src.shape[1] != self.pool_cfg.src_len:
+                raise ValueError(
+                    f"src_embeds length {src.shape[1]} != pool src_len "
+                    f"{self.pool_cfg.src_len}")
+            batch["src_embeds"] = src
+        if self.cfg.n_patches:
+            batch["patch_embeds"] = _as_batch1(request.patch_embeds,
+                                               "patch_embeds")
+        return batch, self._pos_off + n - 1
+
+    def _admit(self, state: RequestState, slot: int):
+        """Prefill + first token; returns the (id, token, finished) event."""
+        req = state.request
+        batch, logit_pos = self._prompt_batch(req)
+        logits, rcache = self._prefill(self.params, batch,
+                                       self.pool.request_cache(),
+                                       jnp.int32(logit_pos))
+        self.pool.insert(slot, rcache)
+        self.metrics.prefills += 1
+        self.scheduler.start(state, slot, self.metrics.steps)
+
+        # first token comes from the prefill logits
+        if req.temperature <= 0.0:
+            tok = int(np.asarray(self._greedy(logits))[0])
+        else:
+            self._key, sub = jax.random.split(self._key)
+            tok = int(np.asarray(self._sample(
+                logits, jnp.full((1,), req.temperature, jnp.float32),
+                jnp.full((1,), req.top_k, jnp.int32), sub))[0])
+        self.metrics.tokens_generated += 1
+        self.metrics.ttft_steps_sum += self.metrics.steps - state.submit_step
+        self.metrics.ttft_count += 1
+        finished = self.scheduler.record_token(state, tok,
+                                               self.metrics.steps)
+        if finished:
+            self._evict(state)
+            return state.request_id, tok, True
+        n_valid = self._pos_off + len(req.prompt)
+        self._tokens[slot] = tok
+        self._temps[slot] = req.temperature
+        self._topk[slot] = req.top_k
+        self.pool.positions[slot] = n_valid   # next decode writes here
+        self.pool.lengths[slot] = n_valid
+        return state.request_id, tok, False
+
+    def _evict(self, state: RequestState) -> None:
+        slot = state.slot
+        self.pool.free(slot)
+        self._tokens[slot] = 0
+        self._temps[slot] = 0.0
+        self._topk[slot] = 0
+        self.metrics.requests_completed += 1
+
+    # ---------------- the serving loop ----------------
+
+    def step(self):
+        """One scheduler step: admit, batched decode, evict finished.
+
+        Returns a list of ``(request_id, token, finished)`` events.
+        """
+        t0 = time.perf_counter()
+        self.metrics.steps += 1
+        step = self.metrics.steps
+        depth = self.scheduler.queue_depth
+        self.metrics.queue_depth_sum += depth
+        self.metrics.max_queue_depth = max(self.metrics.max_queue_depth,
+                                           depth)
+
+        events = []
+        while self.pool.n_free and self.scheduler.waiting:
+            state = self.scheduler.next_waiting()
+            events.append(self._admit(state, self.pool.alloc()))
+
+        active = sorted(self.scheduler.running.items())
+        if active:
+            logits, self.pool.cache = self._decode(
+                self.params, jnp.asarray(self._tokens)[:, None],
+                self.pool.cache, jnp.asarray(self.pool.positions))
+            if not np.any(self._temps > 0):
+                toks = np.asarray(self._greedy(logits))
+            else:
+                self._key, sub = jax.random.split(self._key)
+                toks = np.asarray(self._sample(
+                    logits, jnp.asarray(self._temps),
+                    jnp.asarray(self._topk), sub))
+            self.metrics.decode_steps += 1
+            self.metrics.slot_steps += len(active)
+            self.metrics.slot_capacity_steps += self.pool.n_slots
+            for slot, state in active:
+                self.pool.positions[slot] += 1
+                self.pool.lengths[slot] += 1
+                tok = int(toks[slot])
+                self.metrics.tokens_generated += 1
+                finished = self.scheduler.record_token(state, tok, step)
+                events.append((state.request_id, tok, finished))
+                if finished:
+                    self._evict(state)
+                else:
+                    self._tokens[slot] = tok
+        self.metrics.wall_time_s += time.perf_counter() - t0
+        return events
+
+    def serve(self, requests, *, key=None) -> dict[int, list[int]]:
+        """Run ``requests`` to completion; returns {request_id: token ids}.
+
+        Requests beyond the slot capacity queue and join mid-stream as
+        earlier ones finish.  More can be ``submit()``-ed between ``step()``
+        calls when driving the loop manually.
+        """
+        if key is not None:
+            self._key = key
+        ids = [self.submit(r) for r in requests]
+        while self.scheduler.has_work():
+            self.step()
+        return {rid: list(self.scheduler.finished[rid].generated)
+                for rid in ids}

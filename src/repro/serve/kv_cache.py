@@ -1,0 +1,118 @@
+"""Slotted (paged-lite) KV-cache pool for continuous batching.
+
+One device-resident cache tree sized ``(n_slots, max_len, ...)`` holds every
+running request's KV/ring/recurrent state; a host-side free-list allocator
+hands out slot indices.  The pool reuses the exact ``transformer.init_cache``
+/ ``encdec.init_cache`` layouts, so batched decode stays a single
+jit-compiled step over the full slot dimension — per-slot validity is
+enforced by the existing attention length masking (``kv_len = pos + 1``),
+not by reshaping the pool.
+
+Slots are written two ways:
+
+  * ``insert(slot, request_cache)`` scatters a freshly prefilled batch-1
+    cache into the slot (one jit-compiled ``dynamic_update_slice`` per
+    leaf, at that leaf's batch axis), and
+  * the engine's batched decode step overwrites the pool wholesale with
+    per-slot scatter updates (``api.decode_step_slots``).
+
+Freeing a slot is purely a host-side bookkeeping operation: the stale
+device state is never read again (length masking) and is overwritten by the
+next prefill into that slot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchCfg
+from repro.models import api
+
+
+class SlotKVCache:
+    """Fixed-capacity slot pool with a free-list allocator.
+
+    Attributes
+    ----------
+    cache:       the pooled cache pytree (batch dimension = ``n_slots``).
+    batch_axes:  per-leaf batch-axis tree (``api.cache_batch_axes``) —
+                 pass to ``api.decode_step_slots``.
+    lengths:     (n_slots,) int32, valid kv length per slot (prompt +
+                 generated); 0 for free slots.
+    positions:   (n_slots,) int32, absolute position the slot's pending
+                 token will be written at on the next decode step.
+    alloc_count / free_count: lifetime counters (leak check:
+                 after drain, ``alloc_count == free_count`` and
+                 ``n_free == n_slots``).
+    """
+
+    def __init__(self, cfg: ArchCfg, n_slots: int, max_len: int, *,
+                 src_len: int = 0):
+        if n_slots < 1:
+            raise ValueError(f"n_slots must be >= 1, got {n_slots}")
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.src_len = src_len
+        self.cache = api.init_cache(cfg, n_slots, max_len, src_len)
+        self.batch_axes = api.cache_batch_axes(cfg, max_len, src_len)
+        self.lengths = np.zeros(n_slots, np.int32)
+        self.positions = np.zeros(n_slots, np.int32)
+        self.alloc_count = 0
+        self.free_count = 0
+        # LIFO over a descending stack => lowest free slot allocated first
+        # (deterministic placement for tests and reproducible runs).
+        self._free = list(range(n_slots - 1, -1, -1))
+
+        def insert(pool, one, slot):
+            return jax.tree.map(
+                lambda p, o, a: jax.lax.dynamic_update_slice_in_dim(
+                    p, o.astype(p.dtype), slot, axis=a),
+                pool, one, self.batch_axes)
+
+        self._insert = jax.jit(insert)
+
+    # ---------------- allocator ----------------
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def occupancy(self) -> float:
+        return 1.0 - len(self._free) / self.n_slots
+
+    def alloc(self) -> int | None:
+        """Pop a free slot index, or None when the pool is full."""
+        if not self._free:
+            return None
+        self.alloc_count += 1
+        return self._free.pop()
+
+    def free(self, slot: int) -> None:
+        if not 0 <= slot < self.n_slots:
+            raise ValueError(f"slot {slot} out of range [0, {self.n_slots})")
+        if slot in self._free:
+            raise ValueError(f"double free of slot {slot}")
+        self.free_count += 1
+        self.lengths[slot] = 0
+        self.positions[slot] = 0
+        self._free.append(slot)
+
+    # ---------------- device state ----------------
+
+    def request_cache(self):
+        """A zeroed batch-1 cache in the pool's layout (prefill target).
+
+        Built once and shared: jax arrays are immutable, and prefill
+        returns an updated copy rather than mutating its input."""
+        if not hasattr(self, "_request_cache"):
+            self._request_cache = api.init_cache(self.cfg, 1, self.max_len,
+                                                 self.src_len)
+        return self._request_cache
+
+    def insert(self, slot: int, request_cache) -> None:
+        """Scatter a prefilled batch-1 cache into ``slot``."""
+        self.cache = self._insert(self.cache, request_cache,
+                                  jnp.int32(slot))

@@ -1,0 +1,59 @@
+"""Step-level serving metrics: throughput, slot occupancy, queue depth,
+and a time-to-first-token proxy measured in scheduler steps.
+
+All counters are plain host-side ints accumulated by ``ContinuousEngine``;
+``snapshot()`` renders the derived rates.  "Steps" are engine steps (one
+admission sweep + one batched decode), the natural clock of a
+continuous-batching loop — wall time is tracked separately so tokens/s
+reflects real cost, including prefill work.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    steps: int = 0
+    prefills: int = 0
+    decode_steps: int = 0
+    requests_submitted: int = 0
+    requests_completed: int = 0
+    tokens_generated: int = 0
+    # occupancy: occupied-slot decode steps / (n_slots * decode steps)
+    slot_steps: int = 0
+    slot_capacity_steps: int = 0
+    # queue pressure, sampled at the start of each step
+    queue_depth_sum: int = 0
+    max_queue_depth: int = 0
+    # time-to-first-token proxy: steps from submit to first sampled token
+    ttft_steps_sum: int = 0
+    ttft_count: int = 0
+    wall_time_s: float = 0.0
+
+    # ---------------- derived ----------------
+
+    def occupancy(self) -> float:
+        if not self.slot_capacity_steps:
+            return 0.0
+        return self.slot_steps / self.slot_capacity_steps
+
+    def tokens_per_s(self) -> float:
+        if self.wall_time_s <= 0:
+            return 0.0
+        return self.tokens_generated / self.wall_time_s
+
+    def mean_queue_depth(self) -> float:
+        return self.queue_depth_sum / self.steps if self.steps else 0.0
+
+    def mean_ttft_steps(self) -> float:
+        return (self.ttft_steps_sum / self.ttft_count
+                if self.ttft_count else 0.0)
+
+    def snapshot(self) -> dict:
+        out = dataclasses.asdict(self)
+        out["occupancy"] = self.occupancy()
+        out["tokens_per_s"] = self.tokens_per_s()
+        out["mean_queue_depth"] = self.mean_queue_depth()
+        out["mean_ttft_steps"] = self.mean_ttft_steps()
+        return out

@@ -1,0 +1,144 @@
+"""Admission + step scheduler for continuous batching.
+
+Pure host-side bookkeeping (no jax): requests queue on submission, are
+admitted into KV-cache slots as capacity frees up (FCFS by default, with a
+priority hook), and are evicted the step they finish (stop token, or
+``max_tokens``).  The engine drives it:
+
+    state = scheduler.next_waiting()     # admission order
+    scheduler.start(state, slot, step)   # after prefill
+    scheduler.record_token(state, tok, step)  # True => finished + evicted
+
+The scheduler never touches device state; slot recycling is the engine's
+job (``SlotKVCache.free``).
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.
+
+    ``stop_tokens=None`` defers to the engine default (``cfg.eos_token``
+    when set); pass ``()`` to disable early stop.  ``temperature=0`` is
+    greedy; ``top_k=0`` disables top-k filtering.  ``src_embeds`` (enc-dec
+    encoder memory) and ``patch_embeds`` (VLM prefix) are per-request
+    modality inputs, shaped with or without the leading batch-1 axis.
+    """
+    prompt: Sequence[int]
+    max_tokens: int
+    temperature: float = 0.0
+    top_k: int = 0
+    stop_tokens: Optional[Sequence[int]] = None
+    priority: float = 0.0
+    src_embeds: Any = None
+    patch_embeds: Any = None
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Scheduler-tracked lifecycle of one request."""
+    request: Request
+    request_id: int
+    stop_tokens: tuple
+    status: str = WAITING
+    slot: Optional[int] = None
+    generated: list = dataclasses.field(default_factory=list)
+    submit_step: int = 0
+    admit_step: Optional[int] = None
+    first_token_step: Optional[int] = None
+    finish_step: Optional[int] = None
+    finish_reason: Optional[str] = None   # "stop" | "length"
+
+
+class Scheduler:
+    """FCFS admission with a priority hook.
+
+    ``priority_fn(request) -> float`` overrides the admission order:
+    higher priority first, FCFS (submission order) among ties.  Without it,
+    ``Request.priority`` is used the same way (all-zero priorities degrade
+    to pure FCFS).
+    """
+
+    def __init__(self, *, priority_fn: Callable[[Request], float] | None
+                 = None):
+        self.priority_fn = priority_fn
+        self.waiting: collections.deque[RequestState] = collections.deque()
+        self.running: dict[int, RequestState] = {}    # slot -> state
+        self.finished: dict[int, RequestState] = {}   # request_id -> state
+        self._next_id = 0
+
+    # ---------------- submission / admission ----------------
+
+    def submit(self, request: Request, *, stop_tokens: tuple = (),
+               step: int = 0) -> int:
+        """Queue a request; returns its id.  ``stop_tokens`` is the
+        engine-resolved stop set (request override already applied)."""
+        state = RequestState(request=request, request_id=self._next_id,
+                             stop_tokens=tuple(stop_tokens),
+                             submit_step=step)
+        self._next_id += 1
+        self.waiting.append(state)
+        return state.request_id
+
+    def next_waiting(self) -> RequestState | None:
+        """Pop the next request to admit (priority, then FCFS)."""
+        if not self.waiting:
+            return None
+        key = self.priority_fn or (lambda req: req.priority)
+        # max() is stable over first occurrence: FCFS among equal priority.
+        best = max(self.waiting, key=lambda s: key(s.request))
+        self.waiting.remove(best)
+        return best
+
+    def start(self, state: RequestState, slot: int, step: int) -> None:
+        state.status = RUNNING
+        state.slot = slot
+        state.admit_step = step
+        self.running[slot] = state
+
+    # ---------------- token accounting / eviction ----------------
+
+    def record_token(self, state: RequestState, token: int,
+                     step: int) -> bool:
+        """Append a generated token; returns True when the request is
+        finished (and has been moved out of ``running``)."""
+        state.generated.append(int(token))
+        if state.first_token_step is None:
+            state.first_token_step = step
+        reason = None
+        if int(token) in state.stop_tokens:
+            reason = "stop"
+        elif len(state.generated) >= state.request.max_tokens:
+            reason = "length"
+        if reason is None:
+            return False
+        self._finish(state, reason, step)
+        return True
+
+    def _finish(self, state: RequestState, reason: str, step: int) -> None:
+        state.status = FINISHED
+        state.finish_reason = reason
+        state.finish_step = step
+        if state.slot is not None:
+            self.running.pop(state.slot, None)
+        self.finished[state.request_id] = state
+
+    # ---------------- introspection ----------------
+
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self.waiting)
+
+    @property
+    def n_running(self) -> int:
+        return len(self.running)
