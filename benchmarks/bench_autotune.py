@@ -6,15 +6,26 @@ once with the tile the measured search picked — and emits both rows plus
 the relative delta.  This is the PolyDL claim made measurable: the
 remaining performance lives in the loop tiling around the one kernel.
 
+``run.py --compare-policies --mesh DATAxMODEL`` adds the sharded
+comparison: for each case the *local* (per-shard) problem is timed twice —
+once with the tile the autotuner picked for the **global** shape (what a
+mesh-unaware cache would serve every device) and once with the tile tuned
+for the **local** shape through ``use(mesh=...)``.  The delta is the cost
+of tuning for a problem no device runs.
+
 Opt-in via ``run.py --compare-policies`` (the search itself costs a
 compile-and-run per candidate, so it is not part of the default sweep).
 """
 from __future__ import annotations
 
+import time
+
+import jax
 import jax.numpy as jnp
 
 from benchmarks.common import emit, timeit
 from repro.core import autotune, blocking, dispatch
+from repro.sharding import local as shlocal
 
 CASES = [
     # (op, canonical (m, n, k)) — one representative shape per family
@@ -24,12 +35,78 @@ CASES = [
     ("flash_attention_bwd", (128, 128, 64)),  # the training hot path
 ]
 
+# the --mesh sweep's GEMM cases: big enough that sharding moves the local
+# problem, small enough to measure in interpret mode on CPU (on TPU, scale
+# these up alongside the BENCH_*.json trajectory)
+MESH_CASES = [
+    ("matmul", (512, 256, 512)),
+    ("brgemm", (256, 256, 512)),
+]
+
 
 def _fmt(blocks) -> str:
     return "blocks=" + "x".join(str(v) for v in blocks.astuple())
 
 
-def run():
+def _paired_timeit(fn_a, fn_b, iters: int = 5, warmup: int = 2):
+    """Median us per call for two runners, measured *interleaved*.
+
+    A fixed a-then-b ordering lets cold-start bias and interpret-mode
+    jitter masquerade as a tuning delta; alternating every iteration
+    exposes both runners to the same noise distribution."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    ta.sort()
+    tb.sort()
+    return ta[len(ta) // 2] * 1e6, tb[len(tb) // 2] * 1e6
+
+
+def _parse_mesh(spec: str):
+    """"2x4" -> a device-free (data, model) AbstractMesh."""
+    try:
+        data, model = (int(v) for v in spec.lower().split("x"))
+    except ValueError:
+        raise ValueError(f"--mesh expects DATAxMODEL (e.g. 2x4), got "
+                         f"{spec!r}") from None
+    return shlocal.abstract_mesh((data, model), ("data", "model"))
+
+
+def run_mesh(mesh_spec: str):
+    """Global-shape vs local-shape tuning under a mesh."""
+    mesh = _parse_mesh(mesh_spec)
+    interpret = dispatch.resolve_interpret()
+    for op, (m, n, k) in MESH_CASES:
+        with dispatch.use(blocks_policy="autotune"):
+            tuned_global = dispatch.resolve_blocks(op, m, n, k, jnp.float32,
+                                                   backend="pallas")
+            with dispatch.use(mesh=mesh):
+                tuned_local = dispatch.resolve_blocks(
+                    op, m, n, k, jnp.float32, backend="pallas")
+        lm, ln, lk = shlocal.local_problem(op, m, n, k, mesh)
+        # both tiles run the *local* problem — the shard a device executes
+        us_g, us_l = _paired_timeit(
+            autotune.proxy_runner(op, lm, ln, lk, jnp.float32,
+                                  tuned_global, interpret),
+            autotune.proxy_runner(op, lm, ln, lk, jnp.float32,
+                                  tuned_local, interpret))
+        delta = (us_g - us_l) / us_g * 100.0
+        tag = f"{m}x{n}x{k}@{mesh_spec}"
+        emit(f"tune_mesh_{op}_{tag}_globaltile", us_g,
+             f"{_fmt(tuned_global)};local={lm}x{ln}x{lk}")
+        emit(f"tune_mesh_{op}_{tag}_localtile", us_l,
+             f"{_fmt(tuned_local)};delta={delta:+.1f}%")
+
+
+def run(mesh: str | None = None):
     interpret = dispatch.resolve_interpret()
     for op, (m, n, k) in CASES:
         heur = blocking.default_blocks(op, m, n, k, jnp.float32)
@@ -44,3 +121,5 @@ def run():
         emit(f"tune_{op}_{m}x{n}x{k}_heuristic", us_h, _fmt(heur))
         emit(f"tune_{op}_{m}x{n}x{k}_autotune", us_t,
              f"{_fmt(tuned)};delta={delta:+.1f}%")
+    if mesh:
+        run_mesh(mesh)

@@ -35,6 +35,10 @@ def main() -> None:
     ap.add_argument("--compare-policies", action="store_true",
                     help="run the heuristic-vs-autotune tile comparison "
                          "(pays a measured search per op/shape)")
+    ap.add_argument("--mesh", default=None, metavar="DATAxMODEL",
+                    help="with --compare-policies: also compare global-"
+                         "shape vs per-shard (local-shape) tuning under a "
+                         "device-free mesh of this shape (e.g. 2x4)")
     ap.add_argument("--only", default=None, metavar="SUBSTR",
                     help="run only benchmark modules whose name contains "
                          "this substring (e.g. --only attention)")
@@ -53,10 +57,15 @@ def main() -> None:
             bench_serving]
     if args.compare_policies:
         mods.append(bench_autotune)
+    elif args.mesh:
+        ap.error("--mesh requires --compare-policies")
     if args.only:
         mods = [m for m in mods if args.only in m.__name__]
         if not mods:
             ap.error(f"--only {args.only!r} matches no benchmark module")
+        if args.mesh and bench_autotune not in mods:
+            ap.error(f"--mesh runs inside bench_autotune, which --only "
+                     f"{args.only!r} filtered out (use --only autotune)")
 
     print("name,us_per_call,derived")
     ok = True
@@ -64,7 +73,10 @@ def main() -> None:
     with repro.use(backend=args.backend, blocks_policy=args.blocks_policy):
         for mod in mods:
             try:
-                mod.run()
+                if mod is bench_autotune and args.mesh:
+                    mod.run(mesh=args.mesh)
+                else:
+                    mod.run()
             except Exception:
                 ok = False
                 print(f"# ERROR in {mod.__name__}", file=sys.stderr)

@@ -9,6 +9,8 @@ up (watch queue depth / occupancy in the step log).  The same workload is
 then served at a second tier — same weights, different execution context
 (xla backend, bf16 accumulation) — to show per-tier `repro.use` scoping:
 each engine's jit entry points resolve their own backend and tuned blocks.
+Request 0 registers a streaming `on_token` callback, so its tokens print
+the moment the step that generated them finishes.
 """
 import pathlib
 import sys
@@ -43,7 +45,14 @@ def serve_tier(name, cfg, params, **tier):
     eng = ContinuousEngine(
         cfg, params,
         PoolConfig(n_slots=3, max_len=48, prefill_bucket=8), **tier)
-    ids = [eng.submit(r) for r in make_requests(cfg)]
+
+    def stream(rid, tok, finished):
+        print(f"    stream r{rid}: token={tok}"
+              + (" <eos-of-stream>" if finished else ""))
+
+    reqs = make_requests(cfg)
+    ids = [eng.submit(reqs[0], on_token=stream)]
+    ids += [eng.submit(r) for r in reqs[1:]]
     print(f"--- tier {name}: {tier or 'hardware defaults'}")
     while eng.scheduler.has_work():
         events = eng.step()

@@ -27,6 +27,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import functools
+import math
 import os
 import time
 from typing import Callable, Sequence
@@ -48,6 +49,7 @@ class SearchStats:
     searches: int = 0
     measured: int = 0
     failed: int = 0
+    seeded: int = 0   # searches whose grid was seeded from a tuned neighbor
 
     def snapshot(self) -> dict:
         return dataclasses.asdict(self)
@@ -148,6 +150,36 @@ def measure_candidate(op: str, m: int, n: int, k: int, dtype, backend: str,
     return best
 
 
+def nearest_tuned_neighbor(op: str, m: int, n: int, k: int, dtype,
+                           backend: str):
+    """The winning tile of the closest already-autotuned problem.
+
+    Cross-shape transfer: before paying a full sweep for a new (m, n, k),
+    look at what the measured search already chose for the *nearest* tuned
+    shape of the same (op, backend, dtype) — under sharding the same
+    global problem re-tunes per local shard shape, and neighbors' winners
+    are strong priors.  Distance is the L1 log2 gap over the canonical
+    triple; only entries tuned by the named ``autotune`` policy count
+    (heuristic entries carry no measurement).  A same-triple entry under a
+    different cache key (other mesh signature / geometry) is a distance-0
+    neighbor — the best seed there is.  Returns ``None`` when no neighbor
+    exists.
+    """
+    dname = jnp.dtype(dtype).name
+    best, best_d = None, float("inf")
+    for key, blk in dispatch.tuning_cache_info().items():
+        kop, kbackend, km, kn, kk, kdtype, kpolicy = key[:7]
+        if (kop, kbackend, kdtype) != (op, backend, dname):
+            continue
+        if kpolicy != "autotune":
+            continue
+        d = sum(abs(math.log2(max(a, 1)) - math.log2(max(b, 1)))
+                for a, b in ((m, km), (n, kn), (k, kk)))
+        if d < best_d:
+            best, best_d = blk, d
+    return best
+
+
 def _prune(candidates: Sequence, heuristic, max_candidates: int) -> list:
     """Deterministic subset: the heuristic pick first, then an evenly
     spaced sample of the remaining grid."""
@@ -175,6 +207,14 @@ def autotune_blocks(op: str, m: int, n: int, k: int, dtype, backend: str, *,
     earlier candidate, and a candidate whose measurement raises is skipped
     (counted in ``STATS.failed``) — if every candidate fails, the
     heuristic pick is returned.
+
+    The grid is *seeded* from the nearest already-tuned neighbor (same
+    op/backend/dtype, closest shape): when that winner is feasible for
+    this problem it is measured first, ahead of the heuristic, so tie
+    breaks favor it and a truncated sweep still covers the best prior.
+    Note ``resolve_blocks`` hands this function the per-device *local*
+    problem under a mesh context, so sharded re-tunes seed from their
+    unsharded (or differently-sharded) neighbors automatically.
     """
     heuristic = blocking.default_blocks(op, m, n, k, dtype,
                                         geometry=geometry)
@@ -186,9 +226,15 @@ def autotune_blocks(op: str, m: int, n: int, k: int, dtype, backend: str, *,
     if timer is None:
         timer = functools.partial(measure_candidate, repeats=repeats,
                                   geometry=geometry)
-    candidates = _prune(
-        blocking.candidate_blocks(op, m, n, k, dtype, geometry=geometry),
-        heuristic, max_candidates)
+    grid = blocking.candidate_blocks(op, m, n, k, dtype, geometry=geometry)
+    candidates = _prune(grid, heuristic, max_candidates)
+    seed = nearest_tuned_neighbor(op, m, n, k, dtype, backend)
+    if seed is not None and seed in grid:  # feasible for *this* working set
+        # prepend, then re-trim: the seed displaces the tail candidate so
+        # the configured measurement budget is never exceeded
+        candidates = ([seed] + [c for c in candidates if c != seed])
+        candidates = candidates[:max(1, max_candidates)]
+        STATS.seeded += 1
     STATS.searches += 1
     best, best_t = heuristic, float("inf")
     for cand in candidates:

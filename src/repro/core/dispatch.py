@@ -33,6 +33,18 @@ under a pluggable policy (``heuristic`` by default; the measured
 persists to JSON (:func:`save_cache` / :func:`load_cache`, or automatically
 via the ``REPRO_TUNING_CACHE`` env var) so tuning cost is paid once per
 machine.
+
+Resolution is *mesh-aware*: with ``use(mesh=...)`` active, the canonical
+(m, n, k) an op reports is the **global** problem, but every device of a
+sharded execution runs a local shard of it — so :func:`resolve_blocks`
+first maps the triple to the per-device local problem
+(:func:`repro.sharding.local.local_problem`, using the same divisibility
+fallback as the sharding rules; override per op with
+``use(axis_specs={op: (m_axes, n_axes, k_axes)})``), then tunes, caches,
+and persists under ``(local problem, mesh signature)``.  Policies —
+including the measured autotuner — therefore always see and measure the
+local shape, and a tuned cache transfers across mesh sizes exactly when
+the local shapes match.
 """
 from __future__ import annotations
 
@@ -50,6 +62,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.blocking import (
+    BLOCK_SCHEMAS,
     Blocks,
     blocks_from_dict,
     blocks_to_dict,
@@ -164,11 +177,18 @@ def _check_backend_name(name: str) -> None:
 @dataclasses.dataclass(frozen=True)
 class ExecutionContext:
     """One frame of execution configuration; ``None`` fields are unset and
-    inherit from the enclosing frame (or the env/hardware default)."""
+    inherit from the enclosing frame (or the env/hardware default).
+
+    ``mesh`` is any object exposing ``axis_names`` and ``shape`` (a real
+    ``jax.sharding.Mesh`` or an ``AbstractMesh``); ``axis_specs`` maps op
+    names to canonical-triple axis assignments (see
+    ``repro.sharding.local.local_problem``)."""
     backend: str | None = None
     blocks_policy: str | Callable | None = None
     accum_dtype: Any = None
     interpret: bool | None = None
+    mesh: Any = None
+    axis_specs: Any = None
 
 
 _STACK: contextvars.ContextVar[tuple[ExecutionContext, ...]] = \
@@ -180,15 +200,49 @@ _STACK: contextvars.ContextVar[tuple[ExecutionContext, ...]] = \
 _DEPRECATED_GLOBAL_BACKEND: str | None = None
 
 
+def _check_axis_spec(op: str, spec) -> None:
+    """An axis spec is one entry per canonical dim: exactly 3 entries,
+    each ``None`` / axis name / tuple of axis names.  A bare string would
+    silently iterate per *character* (every letter an unknown axis ->
+    everything replicates), so reject it loudly here."""
+    bad = None
+    if isinstance(spec, str) or not hasattr(spec, "__iter__"):
+        bad = f"{spec!r} is not a sequence of 3 entries"
+    else:
+        entries = tuple(spec)
+        if len(entries) != 3:
+            bad = f"expected 3 entries (m, n, k), got {len(entries)}"
+        else:
+            for e in entries:
+                if e is None or isinstance(e, str):
+                    continue
+                if isinstance(e, (tuple, list)) and all(
+                        isinstance(a, str) for a in e):
+                    continue
+                bad = (f"entry {e!r} is not None, an axis name, or a "
+                       f"tuple of axis names")
+                break
+    if bad:
+        raise ValueError(f"axis_specs[{op!r}]: {bad}")
+
+
 @contextlib.contextmanager
 def use(*, backend: str | None = None,
         blocks_policy: str | Callable | None = None,
-        accum_dtype=None, interpret: bool | None = None):
+        accum_dtype=None, interpret: bool | None = None,
+        mesh=None, axis_specs=None):
     """Scope execution configuration: ``with repro.use(backend="xla"): ...``
 
     Only the fields passed are set; everything else inherits from the
     enclosing context.  Nesting composes (innermost set field wins) and the
     previous state is restored on exit, including on exceptions.
+
+    ``mesh`` makes block resolution *per-shard*: every op's canonical
+    (m, n, k) is mapped to the per-device local problem before tuning
+    (``repro.sharding.local``), and cache entries carry the mesh
+    signature.  ``axis_specs`` (``{op: (m_axes, n_axes, k_axes)}``)
+    overrides how the triple shards — innermost set mapping wins
+    wholesale, it is not merged key-by-key.
 
     Note: a jit-compiled function captures whatever the context resolves to
     at *trace* time; entering a different context later does not retrace
@@ -198,8 +252,17 @@ def use(*, backend: str | None = None,
         _check_backend_name(backend)
     if blocks_policy is not None and not callable(blocks_policy):
         _policy_fn(blocks_policy)  # validates; lazily registers "autotune"
+    if axis_specs is not None:
+        unknown = set(axis_specs) - set(BLOCK_SCHEMAS)
+        if unknown:
+            raise ValueError(
+                f"axis_specs for unknown op(s) {sorted(unknown)}; known: "
+                f"{', '.join(sorted(BLOCK_SCHEMAS))}")
+        for op_name, spec in axis_specs.items():
+            _check_axis_spec(op_name, spec)
     ctx = ExecutionContext(backend=backend, blocks_policy=blocks_policy,
-                           accum_dtype=accum_dtype, interpret=interpret)
+                           accum_dtype=accum_dtype, interpret=interpret,
+                           mesh=mesh, axis_specs=axis_specs)
     token = _STACK.set(_STACK.get() + (ctx,))
     try:
         yield ctx
@@ -210,7 +273,7 @@ def use(*, backend: str | None = None,
 def current_context() -> ExecutionContext:
     """The merged view of the active context stack (innermost wins)."""
     backend = _DEPRECATED_GLOBAL_BACKEND
-    blocks_policy = accum_dtype = interpret = None
+    blocks_policy = accum_dtype = interpret = mesh = axis_specs = None
     for ctx in _STACK.get():
         backend = ctx.backend if ctx.backend is not None else backend
         blocks_policy = (ctx.blocks_policy if ctx.blocks_policy is not None
@@ -218,8 +281,12 @@ def current_context() -> ExecutionContext:
         accum_dtype = (ctx.accum_dtype if ctx.accum_dtype is not None
                        else accum_dtype)
         interpret = ctx.interpret if ctx.interpret is not None else interpret
+        mesh = ctx.mesh if ctx.mesh is not None else mesh
+        axis_specs = (ctx.axis_specs if ctx.axis_specs is not None
+                      else axis_specs)
     return ExecutionContext(backend=backend, blocks_policy=blocks_policy,
-                            accum_dtype=accum_dtype, interpret=interpret)
+                            accum_dtype=accum_dtype, interpret=interpret,
+                            mesh=mesh, axis_specs=axis_specs)
 
 
 # --------------------------------------------------------------------------
@@ -352,23 +419,40 @@ def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
     non-canonical dims (conv2d's ``ConvGeometry(stride, r, s)``) so the
     policy can prune and measure the true working set; it joins the cache
     key, so the same (m, n, k) with different geometry tunes separately.
-    Policy results are memoized keyed (op, backend, shapes, dtype, policy,
-    geometry); an explicit ``blocks`` argument bypasses the cache entirely.
-    When ``REPRO_TUNING_CACHE`` names a file, the cache is loaded from it
-    on first use and written through on every new entry.
+
+    Under an active ``use(mesh=...)`` the triple is first mapped to the
+    per-device **local** problem (``repro.sharding.local.local_problem``,
+    honoring ``use(axis_specs=...)`` overrides), so the policy — and the
+    measured autotuner's proxy — sees the shard each device actually runs,
+    and the cache key gains the mesh signature.
+
+    Policy results are memoized keyed (op, backend, local shapes, dtype,
+    policy, geometry, mesh signature); an explicit ``blocks`` argument
+    bypasses the cache entirely.  When ``REPRO_TUNING_CACHE`` names a
+    file, the cache is loaded from it on first use and written through on
+    every new entry.
     """
     if blocks is not None:
         return blocks
     _maybe_load_env_cache()
-    policy = current_context().blocks_policy or "heuristic"
+    ctx = current_context()
+    policy = ctx.blocks_policy or "heuristic"
     if callable(policy):
         # keyed on the callable itself so ad-hoc autotuners are memoized
         # too (a fresh lambda per call site gets a fresh entry)
         policy_fn, policy_key = policy, policy
     else:
         policy_fn, policy_key = _policy_fn(policy), policy
+    mesh_sig = None
+    if ctx.mesh is not None:
+        # Lazy import: sharding.local is tiny but dispatch must stay
+        # importable before the sharding package (kernel registration).
+        from repro.sharding import local as _local
+        m, n, k = _local.local_problem(op, m, n, k, ctx.mesh,
+                                       axis_specs=ctx.axis_specs)
+        mesh_sig = _local.mesh_signature(ctx.mesh)
     key = (op, backend, int(m), int(n), int(k), jnp.dtype(dtype).name,
-           policy_key, geometry)
+           policy_key, geometry, mesh_sig)
     hit = _TUNING_CACHE.get(key)
     if hit is None:
         if geometry is not None and _accepts_geometry(policy_fn):
@@ -405,9 +489,11 @@ def _maybe_load_env_cache() -> None:
 
 def _entry_key(e: dict) -> tuple:
     geom = e.get("geometry")
+    mesh = e.get("mesh")
     return (e["op"], e["backend"], int(e["m"]), int(e["n"]), int(e["k"]),
             e["dtype"], e["policy"], e.get("platform"),
-            tuple(sorted(geom.items())) if geom else None)
+            tuple(sorted(geom.items())) if geom else None,
+            tuple(mesh) if mesh else None)
 
 
 def save_cache(path: str | None = None) -> int:
@@ -431,9 +517,10 @@ def save_cache(path: str | None = None) -> int:
             {"op": op, "backend": backend, "m": m, "n": n, "k": k,
              "dtype": dtype, "policy": policy, "platform": platform,
              "geometry": geometry.asdict() if geometry is not None else None,
+             "mesh": list(mesh_sig) if mesh_sig is not None else None,
              "blocks": blocks_to_dict(blk)}
-            for (op, backend, m, n, k, dtype, policy, geometry), blk
-            in _TUNING_CACHE.items()
+            for (op, backend, m, n, k, dtype, policy, geometry, mesh_sig),
+            blk in _TUNING_CACHE.items()
             if isinstance(policy, str)
         ]
     if os.path.exists(path):
@@ -469,9 +556,11 @@ def load_cache(path: str | None = None) -> int:
             if e.get("platform", platform) != platform:
                 continue
             try:
+                mesh = e.get("mesh")
                 key = (e["op"], e["backend"], int(e["m"]), int(e["n"]),
                        int(e["k"]), e["dtype"], e["policy"],
-                       geometry_from_dict(e.get("geometry")))
+                       geometry_from_dict(e.get("geometry")),
+                       tuple(str(a) for a in mesh) if mesh else None)
                 blk = blocks_from_dict(e["blocks"])
             except (KeyError, TypeError, ValueError):
                 # Entry written by another repo version (unknown block or

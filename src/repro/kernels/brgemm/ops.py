@@ -15,7 +15,12 @@ and the ``backend=`` kwarg is the explicit-call-argument tier of the
 dispatch precedence (call arg > context > env > hardware default).  Block
 geometry and interpret mode resolve through the active
 ``repro.use(...)`` context; block selection is memoized in the dispatch
-tuning cache keyed (op, backend, shapes, dtype, policy).
+tuning cache keyed (op, backend, shapes, dtype, policy, mesh signature).
+The (m, n, k) each entry point reports to ``resolve_blocks`` is the
+*global* problem it was called with — under ``repro.use(mesh=...)``
+dispatch maps it to the per-device local shard before tuning, so the same
+call site gets global-shape tiles in single-device runs and per-shard
+tiles under a production mesh with no threading here.
 
 The custom VJP expresses the backward passes through the *same* building
 block, mirroring the paper's claim that fwd/bwd/upd all reduce to

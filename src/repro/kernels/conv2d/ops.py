@@ -155,7 +155,9 @@ def conv2d(
 
     ``blocks`` (a ``ConvBlocks``) is the explicit tier-1 geometry override;
     by default the tile resolves through ``dispatch.resolve_blocks`` under
-    the active ``repro.use(blocks_policy=...)``.
+    the active ``repro.use(blocks_policy=...)`` — and per-shard under
+    ``repro.use(mesh=...)``, where the out-channel dim (the canonical
+    ``k``) localizes over the model axis before tuning.
     """
     impl = dispatch.get_impl("conv2d", backend)
     return impl(x, w, bias, stride=stride, padding=padding,

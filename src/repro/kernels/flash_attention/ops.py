@@ -168,9 +168,12 @@ def flash_attention(q, k, v, *, causal: bool = True,
     is the same for the fused backward kernels — by default both resolve
     through ``dispatch.resolve_blocks`` under the active block policy (the
     backward at backward-trace time, under its own
-    ``flash_attention_bwd`` cache entry).  The old per-dimension
-    ``block_q=``/``block_k=`` kwargs still work but are deprecated in
-    favor of ``blocks=``.
+    ``flash_attention_bwd`` cache entry).  Under ``repro.use(mesh=...)``
+    the default (tq, tk, d) triple is mesh-invariant — the model axis
+    shards heads, which sit outside it — but sequence-parallel setups can
+    localize tq/tk via ``use(axis_specs={"flash_attention": ...})``.  The
+    old per-dimension ``block_q=``/``block_k=`` kwargs still work but are
+    deprecated in favor of ``blocks=``.
     """
     # Validated here, not in the xla impl: a typo'd value must fail the
     # same way whichever backend dispatch resolves to.

@@ -1,7 +1,3 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-
-# isort: split
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this lowers the shape's entry point (train_step / prefill /
@@ -12,15 +8,26 @@ production shardings, compiles it, and records:
   * cost analysis (FLOPs / bytes for the roofline),
   * collective bytes parsed from the partitioned HLO
     (all-gather / all-reduce / reduce-scatter / all-to-all /
-    collective-permute), per collective kind.
+    collective-permute), per collective kind,
+  * the per-shard block choices mesh-aware dispatch resolves for the
+    cell's hot GEMM/attention problems, next to the global-shape picks
+    (``resolved_blocks``: tiles tuned for the 16-row shard a device runs,
+    not the 8192-row global problem).
+
+The host-device-count XLA flag is set from :func:`main` (or the
+``REPRO_DRYRUN_DEVICES`` env var), **never at import time**, so importing
+this module for tests does not clobber ``XLA_FLAGS`` for the whole
+process.
 
 Usage:
   python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
   python -m repro.launch.dryrun --all            # every cell, subprocesses
   python -m repro.launch.dryrun --all --multi-pod
+  python -m repro.launch.dryrun --blocks-smoke --devices 8   # CI smoke
 """
 import argparse
 import json
+import os
 import pathlib
 import re
 import subprocess
@@ -33,14 +40,32 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
 from repro.configs.shapes import SHAPES, applicable
-from repro.launch.mesh import make_production_mesh
+from repro.core import dispatch
+from repro.core.blocking import blocks_to_dict
+from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import api
+from repro.sharding import local as shlocal
 from repro.sharding import rules
 from repro.sharding.annotate import use_rules
 from repro.train import optimizer as opt
 from repro.train import train_step as ts
 
 ART = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "artifacts"
+
+DEVICES_ENV = "REPRO_DRYRUN_DEVICES"
+DEFAULT_HOST_DEVICES = 512
+
+
+def force_host_device_count(n: int | None = None) -> None:
+    """Arrange for ``n`` fake host devices (default 512, or
+    ``REPRO_DRYRUN_DEVICES``).  Must run before jax initializes its
+    backends; a pre-existing device-count flag in ``XLA_FLAGS`` wins."""
+    n = n or int(os.environ.get(DEVICES_ENV, DEFAULT_HOST_DEVICES))
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" in flags:
+        return
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={n}".strip())
 
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
@@ -77,6 +102,72 @@ def collective_bytes(hlo_text: str) -> dict:
         out["_count_" + kind] = out.get("_count_" + kind, 0) + 1
     out["total"] = sum(v for k, v in out.items()
                        if not k.startswith("_count_") and k != "total")
+    return out
+
+
+def cell_problems(cfg, shape):
+    """The cell's hot canonical tuning problems, with the axis assignment
+    the sharding rules induce on each triple.
+
+    One row per projection family: column-parallel GEMMs (qkv / mlp-up)
+    shard rows on the DP axes and the out dim on the model axis;
+    row-parallel GEMMs (attn-out / mlp-down) shard the *contraction* dim
+    on the model axis instead; attention's triple stays head-sharded
+    (local == global).  Returns ``(name, op, (m, n, k), axis_spec)``.
+    """
+    dp = ("pod", "data")  # shlocal.shard_count skips axes absent from mesh
+    model = "model" if cfg.tp else None
+    decode = shape.kind == "decode"
+    rows = shape.global_batch * (1 if decode else shape.seq_len)
+    d, dh = cfg.d_model, cfg.dh
+    n_q = cfg.n_heads * dh
+    probs = [
+        ("attn_qkv", "matmul", (rows, n_q, d), (dp, model, None)),
+        ("attn_out", "matmul", (rows, d, n_q), (dp, None, model)),
+    ]
+    if cfg.d_ff:
+        probs += [
+            ("mlp_up", "matmul", (rows, cfg.d_ff, d), (dp, model, None)),
+            ("mlp_down", "matmul", (rows, d, cfg.d_ff), (dp, None, model)),
+        ]
+    if cfg.moe_d_ff:
+        probs.append(("moe_up", "brgemm",
+                      (rows, cfg.moe_d_ff, d), (dp, model, None)))
+    tq = 1 if decode else shape.seq_len
+    probs.append(("attention", "flash_attention",
+                  (tq, shape.seq_len, dh), (None, None, None)))
+    return probs
+
+
+def block_choices(cfg, shape, mesh, dtype=None):
+    """Per-shard vs global-shape block resolution for one cell.
+
+    For each hot problem this resolves the tile twice — once against the
+    global shape (meshless context) and once through mesh-aware dispatch
+    (``use(mesh=..., axis_specs=...)``, which localizes the triple before
+    tuning) — and records both with the local problem, so the dry-run
+    artifact shows exactly where global-shape tuning would have picked
+    tiles for a problem no device runs.  Heuristic policy: cheap enough to
+    run per cell; a persisted ``REPRO_TUNING_CACHE`` upgrade is the
+    measured follow-up.
+    """
+    dtype = jnp.dtype(dtype or cfg.dtype)
+    out = []
+    for name, op, (m, n, k), spec in cell_problems(cfg, shape):
+        blk_global = dispatch.resolve_blocks(op, m, n, k, dtype,
+                                             backend="pallas")
+        with dispatch.use(mesh=mesh, axis_specs={op: spec}):
+            local = shlocal.local_problem(op, m, n, k, mesh,
+                                          axis_specs={op: spec})
+            blk_local = dispatch.resolve_blocks(op, m, n, k, dtype,
+                                                backend="pallas")
+        out.append({
+            "name": name, "op": op, "dtype": dtype.name,
+            "global": [m, n, k], "local": list(local),
+            "blocks_global": blocks_to_dict(blk_global),
+            "blocks_local": blocks_to_dict(blk_local),
+            "differs": blk_local != blk_global,
+        })
     return out
 
 
@@ -192,6 +283,7 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     rec = {
         "arch": arch_name, "shape": shape_name,
         "mesh": "multi" if multi_pod else "single",
+        "mesh_axes": {str(a): int(mesh.shape[a]) for a in mesh.axis_names},
         "status": "ok", "tag": extra_tag,
         "n_devices": mesh.size,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
@@ -201,6 +293,9 @@ def lower_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         "state_bytes_per_device": arg_bytes,
         "params_total": total_p, "params_active": active_p,
         "moment_dtype": moment_dtype,
+        # outside the `with mesh` block on purpose: the meshless baseline
+        # resolution must not see a dispatch mesh context
+        "resolved_blocks": block_choices(cfg, shape, mesh),
     }
     return rec
 
@@ -241,6 +336,26 @@ def run_all(multi_pod: bool, force: bool = False):
     return results
 
 
+def blocks_smoke(arch: str, shape_name: str) -> int:
+    """CI smoke: one (arch x shape x host-mesh) cell through mesh-aware
+    dispatch.  Prints the ``resolved_blocks`` record and fails unless at
+    least one per-shard choice differs from the global-shape choice."""
+    mesh = make_host_mesh()
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    rec = {
+        "arch": arch, "shape": shape_name,
+        "mesh_axes": {str(a): int(mesh.shape[a]) for a in mesh.axis_names},
+        "n_devices": mesh.size,
+        "resolved_blocks": block_choices(cfg, shape, mesh),
+    }
+    print(json.dumps(rec, indent=1))
+    n_diff = sum(r["differs"] for r in rec["resolved_blocks"])
+    print(f"[dryrun-smoke] problems={len(rec['resolved_blocks'])} "
+          f"per_shard_differs={n_diff}")
+    return 0 if n_diff else 1
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", choices=configs.ARCH_NAMES)
@@ -248,7 +363,19 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="forced host device count (default "
+                         f"{DEFAULT_HOST_DEVICES}, or {DEVICES_ENV})")
+    ap.add_argument("--blocks-smoke", action="store_true",
+                    help="resolve one cell's blocks per-shard on a host "
+                         "mesh and assert they differ from the global "
+                         "choice (CI)")
     args = ap.parse_args()
+    force_host_device_count(args.devices)
+
+    if args.blocks_smoke:
+        sys.exit(blocks_smoke(args.arch or "smollm-135m",
+                              args.shape or "decode_32k"))
 
     if args.all:
         res = run_all(args.multi_pod, args.force)

@@ -16,6 +16,22 @@ def make_mesh(shape, axes):
     return jax.make_mesh(tuple(shape), tuple(axes))
 
 
+def make_host_mesh(n_devices: int | None = None):
+    """A smoke-scale (data, model) mesh over the host's visible devices.
+
+    Used by the dry-run blocks smoke and tests running under
+    ``--xla_force_host_platform_device_count=N``: the model axis takes the
+    largest power-of-two factor up to 16 that still leaves a data axis
+    (e.g. 8 devices -> (2, 4)), mirroring the production mesh's shape
+    hierarchy at host scale.
+    """
+    n = n_devices or jax.device_count()
+    model = 1
+    while model * 2 <= min(n // 2, 16) and n % (model * 2) == 0:
+        model *= 2
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
 def dp_axes(mesh) -> tuple[str, ...]:
     """Data-parallel / FSDP axes present in the mesh."""
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)

@@ -13,17 +13,21 @@ free up, so decode batches stay full and a single long request no longer
 stalls the batch.
 
 Both engines scope their serving tier (backend, block policy, accumulation
-dtype, interpret mode) through ``dispatch.use``: the context is captured at
-trace time, so each jit entry point re-enters the engine's context when it
-traces.  Two engines at different tiers resolve tuned blocks independently;
-with ``blocks_policy="autotune"`` the first trace pays the measured search
-(or reads the persisted ``REPRO_TUNING_CACHE``) and every later request
-reuses the winners.
+dtype, interpret mode, mesh) through ``dispatch.use``: the context is
+captured at trace time, so each jit entry point re-enters the engine's
+context when it traces.  Two engines at different tiers resolve tuned
+blocks independently; with ``blocks_policy="autotune"`` the first trace
+pays the measured search (or reads the persisted ``REPRO_TUNING_CACHE``)
+and every later request reuses the winners.  Under a ``mesh`` (explicit,
+or installed by the launcher via ``sharding.annotate.use_rules``) block
+resolution is per-shard: tiles are tuned for the local problem each
+device runs, not the global batch shape.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -32,6 +36,7 @@ import numpy as np
 from repro.configs.base import ArchCfg
 from repro.core import dispatch
 from repro.models import api
+from repro.sharding import annotate
 from repro.serve.kv_cache import SlotKVCache
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import Request, RequestState, Scheduler
@@ -59,27 +64,42 @@ class ServeConfig:
     src_len: int = 0           # enc-dec encoder memory length
 
 
+def _tier_context(backend, blocks_policy, accum_dtype, interpret=None,
+                  mesh=None, axis_specs=None):
+    """The ``dispatch.use`` kwargs of one serving tier, resolved at trace
+    time: an unset mesh falls back to whatever the launcher installed via
+    ``sharding.annotate.use_rules`` *when the jit entry traces*."""
+    return dict(backend=backend, blocks_policy=blocks_policy,
+                accum_dtype=accum_dtype, interpret=interpret,
+                mesh=mesh if mesh is not None else annotate.current_mesh(),
+                axis_specs=axis_specs)
+
+
 class Engine:
     def __init__(self, cfg: ArchCfg, params, scfg: ServeConfig, *,
                  backend: str | None = None,
-                 blocks_policy=None, accum_dtype=None):
+                 blocks_policy=None, accum_dtype=None,
+                 mesh=None, axis_specs=None):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
         self.backend = backend
         self.blocks_policy = blocks_policy
         self.accum_dtype = accum_dtype
+        self.mesh = mesh
+        self.axis_specs = axis_specs
+
+        def _tier():
+            return _tier_context(self.backend, self.blocks_policy,
+                                 self.accum_dtype, mesh=self.mesh,
+                                 axis_specs=self.axis_specs)
 
         def _prefill(p, b, c):
-            with dispatch.use(backend=self.backend,
-                              blocks_policy=self.blocks_policy,
-                              accum_dtype=self.accum_dtype):
+            with dispatch.use(**_tier()):
                 return api.prefill(p, b, cfg, c)
 
         def _decode(p, t, c, pos):
-            with dispatch.use(backend=self.backend,
-                              blocks_policy=self.blocks_policy,
-                              accum_dtype=self.accum_dtype):
+            with dispatch.use(**_tier()):
                 return api.decode_step(p, t, cfg, c, pos)
 
         self._prefill = jax.jit(_prefill)
@@ -202,6 +222,7 @@ class ContinuousEngine:
     def __init__(self, cfg: ArchCfg, params, pool: PoolConfig, *,
                  backend: str | None = None, blocks_policy=None,
                  accum_dtype=None, interpret: bool | None = None,
+                 mesh=None, axis_specs=None,
                  priority_fn=None, key=None):
         if pool.prefill_bucket is not None and not _supports_bucketing(cfg):
             raise ValueError(
@@ -222,18 +243,25 @@ class ContinuousEngine:
         self._tokens = np.zeros(pool.n_slots, np.int32)
         self._temps = np.zeros(pool.n_slots, np.float32)
         self._topk = np.zeros(pool.n_slots, np.int32)
+        # request_id -> on_token callback for streaming consumers
+        self._on_token: dict[int, Any] = {}
 
-        tier = dict(backend=backend, blocks_policy=blocks_policy,
-                    accum_dtype=accum_dtype, interpret=interpret)
+        def tier():
+            # Resolved inside the jit closures, i.e. at *trace* time, so
+            # an annotate-installed mesh active when the entry first
+            # compiles shapes the tier's block resolution.
+            return _tier_context(backend, blocks_policy, accum_dtype,
+                                 interpret, mesh, axis_specs)
+
         batch_axes = self.pool.batch_axes
 
         def _prefill(p, batch, cache, logit_pos):
-            with dispatch.use(**tier):
+            with dispatch.use(**tier()):
                 return api.prefill(p, batch, cfg, cache,
                                    logit_pos=logit_pos)
 
         def _decode(p, tokens, cache, positions):
-            with dispatch.use(**tier):
+            with dispatch.use(**tier()):
                 return api.decode_step_slots(p, tokens, cfg, cache,
                                              positions,
                                              batch_axes=batch_axes)
@@ -248,8 +276,17 @@ class ContinuousEngine:
 
     # ---------------- request lifecycle ----------------
 
-    def submit(self, request: Request) -> int:
-        """Queue a request; returns its id (see ``scheduler.finished``)."""
+    def submit(self, request: Request, *,
+               on_token: Callable[[int, int, bool], Any] | None = None
+               ) -> int:
+        """Queue a request; returns its id (see ``scheduler.finished``).
+
+        ``on_token(request_id, token, finished)`` streams the request's
+        tokens as they are produced: it fires once per event, inside the
+        ``step()`` that generated the token and in generation order, and
+        never again after the ``finished=True`` call.  Exceptions from the
+        callback propagate out of ``step()``/``serve()``.
+        """
         n_prompt = len(request.prompt)
         if n_prompt < 1:
             raise ValueError("empty prompt")
@@ -263,8 +300,20 @@ class ContinuousEngine:
             stops = ((self.cfg.eos_token,)
                      if self.cfg.eos_token is not None else ())
         self.metrics.requests_submitted += 1
-        return self.scheduler.submit(request, stop_tokens=tuple(stops),
-                                     step=self.metrics.steps)
+        rid = self.scheduler.submit(request, stop_tokens=tuple(stops),
+                                    step=self.metrics.steps)
+        if on_token is not None:
+            self._on_token[rid] = on_token
+        return rid
+
+    def _emit(self, request_id: int, token: int, finished: bool):
+        """Build one step event, streaming it to the request's callback."""
+        cb = self._on_token.get(request_id)
+        if cb is not None:
+            cb(request_id, token, finished)
+            if finished:
+                self._on_token.pop(request_id, None)
+        return request_id, token, finished
 
     def _prompt_batch(self, request: Request):
         """(batch dict, logit_pos) for one request's prefill, optionally
@@ -351,7 +400,7 @@ class ContinuousEngine:
         events = []
         while self.pool.n_free and self.scheduler.waiting:
             state = self.scheduler.next_waiting()
-            events.append(self._admit(state, self.pool.alloc()))
+            events.append(self._emit(*self._admit(state, self.pool.alloc())))
 
         active = sorted(self.scheduler.running.items())
         if active:
@@ -374,7 +423,7 @@ class ContinuousEngine:
                 tok = int(toks[slot])
                 self.metrics.tokens_generated += 1
                 finished = self.scheduler.record_token(state, tok, step)
-                events.append((state.request_id, tok, finished))
+                events.append(self._emit(state.request_id, tok, finished))
                 if finished:
                     self._evict(state)
                 else:

@@ -20,6 +20,7 @@ import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.launch.mesh import dp_axes, dp_size, model_size
+from repro.sharding.local import shard_count
 
 # leaf names -> column-parallel (in, out) = (fsdp, model)
 _COL = {
@@ -33,12 +34,11 @@ _MOE_LEAVES = {"w_gate", "w_up", "w_down"}
 
 
 def _div(n: int, axes, mesh) -> bool:
-    if not axes:
-        return False
-    size = 1
-    for a in (axes if isinstance(axes, tuple) else (axes,)):
-        size *= mesh.shape[a]
-    return n % size == 0 and n >= size
+    """Dim shards over ``axes`` iff it divides; else replicate (never
+    raise).  The same fallback ``sharding.local`` applies when computing
+    per-device problem shapes, so dispatch always tunes for the local
+    shape the partitioner actually produces."""
+    return shard_count(n, axes, mesh) > 1
 
 
 def _lead(ndim: int, trailing: tuple) -> P:

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.configs.base import ArchCfg
 from repro.core import dispatch
 from repro.models import api
+from repro.sharding import annotate
 from repro.train import optimizer as opt
 from repro.train.schedule import warmup_cosine
 from repro.distributed.collectives import compress_grads, decompress_grads
@@ -24,7 +25,7 @@ from repro.distributed.collectives import compress_grads, decompress_grads
 def make_train_step(cfg: ArchCfg, ocfg: opt.AdamWCfg, *,
                     microbatches: int = 1, grad_compression: str = "none",
                     backend: str | None = None, blocks_policy=None,
-                    accum_dtype=None):
+                    accum_dtype=None, mesh=None, axis_specs=None):
     """Returns train_step(state, batch) -> (state, metrics).
 
     ``blocks_policy``/``accum_dtype`` scope the whole step's kernels —
@@ -34,7 +35,14 @@ def make_train_step(cfg: ArchCfg, ocfg: opt.AdamWCfg, *,
     tune under the same policy (e.g. ``blocks_policy="autotune"``
     measures every GEMM/conv/attention fwd+bwd tile at first trace;
     ``accum_dtype=jnp.bfloat16`` trades accumulator precision for VMEM
-    headroom)."""
+    headroom).
+
+    ``mesh`` makes every block resolution per-shard (tiles are tuned for
+    the local problem each device runs, not the global shape — see
+    ``repro.sharding.local``); when not given, the mesh the launcher
+    installed via ``sharding.annotate.use_rules`` is captured at trace
+    time, so the dry-run/production path is mesh-aware without extra
+    plumbing.  ``axis_specs`` overrides per-op triple sharding."""
 
     def loss_of(params, batch):
         return api.loss_fn(params, batch, cfg)
@@ -45,8 +53,10 @@ def make_train_step(cfg: ArchCfg, ocfg: opt.AdamWCfg, *,
         # just the loss — so the custom-VJP backward rules (dgrad/wgrad
         # kernels, traced when value_and_grad pulls back cotangents)
         # resolve their block geometry under the same tuned context.
+        step_mesh = mesh if mesh is not None else annotate.current_mesh()
         with dispatch.use(backend=backend, blocks_policy=blocks_policy,
-                          accum_dtype=accum_dtype):
+                          accum_dtype=accum_dtype, mesh=step_mesh,
+                          axis_specs=axis_specs):
             return _train_step(state, batch)
 
     def _train_step(state, batch):

@@ -1,0 +1,370 @@
+"""Mesh-aware dispatch: per-shard local problems, mesh-signature cache
+keys (including JSON persistence), sharding-rule divisibility fallbacks,
+cross-shape autotune seeding, and mesh capture in the train/serve tiers."""
+import os
+import pathlib
+import subprocess
+import sys
+import types
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+import repro
+from repro.core import autotune, blocking, dispatch
+from repro.sharding import annotate, rules
+from repro.sharding import local as shlocal
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+# 8-way host-scale mesh, device-free: only axis_names/shape are read by
+# the local-shape math and the dispatch tuning key.
+MESH8 = shlocal.abstract_mesh((2, 4), ("data", "model"))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    dispatch.clear_tuning_cache()
+    yield
+    dispatch.clear_tuning_cache()
+
+
+def _key(path):
+    return types.SimpleNamespace(key=path)
+
+
+# --------------------------------------------------------------------------
+# local shapes + divisibility fallback
+# --------------------------------------------------------------------------
+
+def test_shard_count_and_divisibility_fallback():
+    assert shlocal.shard_count(8192, ("data",), MESH8) == 2
+    assert shlocal.shard_count(8192, "model", MESH8) == 4
+    assert shlocal.shard_count(8192, ("data", "model"), MESH8) == 8
+    # non-divisible / too-small dims replicate, never raise
+    assert shlocal.shard_count(7, ("data", "model"), MESH8) == 1
+    assert shlocal.shard_count(6, "model", MESH8) == 1
+    assert shlocal.shard_count(3, ("data",), MESH8) == 1  # 3 % 2 != 0
+    # axes absent from the mesh are skipped (production specs on host mesh)
+    assert shlocal.shard_count(64, ("pod", "data"), MESH8) == 2
+    assert shlocal.shard_count(64, None, MESH8) == 1
+
+
+def test_local_shape_applies_spec_per_dim():
+    got = shlocal.local_shape((8192, 512, 1024),
+                              (("data",), "model", None), MESH8)
+    assert got == (4096, 128, 1024)
+    # trailing dims without a spec entry replicate
+    assert shlocal.local_shape((64, 64, 64), ("model",), MESH8) \
+        == (16, 64, 64)
+
+
+def test_default_axis_specs_follow_sharding_rules():
+    specs = shlocal.default_axis_specs(MESH8)
+    assert set(specs) == set(blocking.BLOCK_SCHEMAS)
+    # GEMM: rows on DP (batch rule), out dim on model (column-parallel
+    # weight rule), contraction gathered
+    assert specs["matmul"] == (("data",), "model", None)
+    assert shlocal.local_problem("matmul", 8192, 512, 1024, MESH8) \
+        == (4096, 128, 1024)
+    # attention triple is head-sharded -> mesh-invariant by default
+    assert shlocal.local_problem("flash_attention", 128, 4096, 64, MESH8) \
+        == (128, 4096, 64)
+    # conv out-channels on model
+    assert shlocal.local_problem("conv2d", 28, 128, 512, MESH8) \
+        == (28, 128, 128)
+
+
+def test_axis_specs_override_row_parallel():
+    got = shlocal.local_problem(
+        "matmul", 8192, 512, 1024, MESH8,
+        axis_specs={"matmul": (("data",), None, "model")})
+    assert got == (4096, 512, 256)
+
+
+def test_mesh_signature_is_axis_names_not_sizes():
+    assert shlocal.mesh_signature(MESH8) == ("data", "model")
+    big = shlocal.abstract_mesh((16, 16), ("data", "model"))
+    assert shlocal.mesh_signature(big) == shlocal.mesh_signature(MESH8)
+
+
+# --------------------------------------------------------------------------
+# resolve_blocks under a mesh
+# --------------------------------------------------------------------------
+
+def test_resolve_blocks_returns_local_shard_tiles():
+    """Acceptance: on an 8-way mesh a model-sharded GEMM resolves the tile
+    of the *local* shard shape, not the global shape."""
+    spec = {"matmul": (("data",), None, "model")}  # row-parallel: k/model
+    glob = dispatch.resolve_blocks("matmul", 8192, 512, 1024, jnp.float32,
+                                   backend="pallas")
+    with repro.use(mesh=MESH8, axis_specs=spec):
+        local = dispatch.resolve_blocks("matmul", 8192, 512, 1024,
+                                        jnp.float32, backend="pallas")
+    assert glob == blocking.default_blocks("matmul", 8192, 512, 1024,
+                                           jnp.float32)
+    assert local == blocking.default_blocks("matmul", 4096, 512, 256,
+                                            jnp.float32)
+    assert local != glob  # bk tracks the sharded contraction dim
+
+
+def test_mesh_signature_joins_cache_key():
+    dispatch.resolve_blocks("matmul", 256, 256, 256, jnp.float32,
+                            backend="pallas")
+    with repro.use(mesh=MESH8):
+        dispatch.resolve_blocks("matmul", 256, 256, 256, jnp.float32,
+                                backend="pallas")
+    keys = set(dispatch.tuning_cache_info())
+    sigs = {k[-1] for k in keys}
+    assert sigs == {None, ("data", "model")}
+    # the meshed entry is keyed by the *local* problem
+    assert ("matmul", "pallas", 128, 64, 256, "float32", "heuristic",
+            None, ("data", "model")) in keys
+
+
+def test_cache_transfers_across_mesh_sizes_when_local_shapes_match():
+    calls = []
+
+    def policy(op, m, n, k, dtype, backend):
+        calls.append((m, n, k))
+        return blocking.default_blocks(op, m, n, k, dtype)
+
+    small = shlocal.abstract_mesh((2, 4), ("data", "model"))
+    big = shlocal.abstract_mesh((4, 8), ("data", "model"))
+    with repro.use(blocks_policy=policy):
+        with repro.use(mesh=small):
+            dispatch.resolve_blocks("matmul", 256, 128, 1024, jnp.float32,
+                                    backend="pallas")
+        with repro.use(mesh=big):
+            dispatch.resolve_blocks("matmul", 512, 256, 1024, jnp.float32,
+                                    backend="pallas")
+    # both globals localize to (128, 32, 1024) -> one policy call, one entry
+    assert calls == [(128, 32, 1024)]
+    assert len(dispatch.tuning_cache_info()) == 1
+
+
+def test_mesh_signature_survives_save_load_round_trip(tmp_path):
+    path = str(tmp_path / "cache.json")
+    dispatch.resolve_blocks("matmul", 512, 512, 512, jnp.float32,
+                            backend="pallas")
+    with repro.use(mesh=MESH8):
+        dispatch.resolve_blocks("matmul", 512, 512, 512, jnp.float32,
+                                backend="pallas")
+    before = dispatch.tuning_cache_info()
+    assert dispatch.save_cache(path) == 2
+    dispatch.clear_tuning_cache()
+    assert dispatch.load_cache(path) == 2
+    assert dispatch.tuning_cache_info() == before
+    # a second save round-trips entries merged back from the file
+    assert dispatch.save_cache(path) == 2
+
+
+def test_unknown_axis_specs_op_rejected():
+    with pytest.raises(ValueError, match="axis_specs"):
+        with repro.use(axis_specs={"not_an_op": (None, None, None)}):
+            pass
+
+
+def test_malformed_axis_spec_rejected():
+    # a bare string would iterate per character and silently replicate
+    with pytest.raises(ValueError, match="sequence of 3"):
+        with repro.use(axis_specs={"matmul": "model"}):
+            pass
+    with pytest.raises(ValueError, match="3 entries"):
+        with repro.use(axis_specs={"matmul": (None, "model")}):
+            pass
+    with pytest.raises(ValueError, match="axis name"):
+        with repro.use(axis_specs={"matmul": (None, 4, None)}):
+            pass
+    # PartitionSpec-like triples are fine
+    from jax.sharding import PartitionSpec as P
+    with repro.use(axis_specs={"matmul": P(("data",), "model", None)}):
+        pass
+
+
+# --------------------------------------------------------------------------
+# sharding.rules divisibility fallback (param / batch rules)
+# --------------------------------------------------------------------------
+
+def test_param_spec_divisible_dims_shard():
+    from jax.sharding import PartitionSpec as P
+    spec = rules.param_spec([_key("wq")], (256, 128), MESH8)
+    assert spec == P(("data",), "model")
+    spec = rules.param_spec([_key("wo")], (128, 256), MESH8)
+    assert spec == P("model", ("data",))
+
+
+def test_param_spec_non_divisible_dims_replicate():
+    from jax.sharding import PartitionSpec as P
+    # 255 % 2 != 0 and 126 % 4 != 0: both dims fall back to replication
+    assert rules.param_spec([_key("wq")], (255, 126), MESH8) == P(None, None)
+    # one divisible dim still shards while the other replicates
+    assert rules.param_spec([_key("wq")], (255, 128), MESH8) \
+        == P(None, "model")
+    assert rules.param_spec([_key("wo")], (126, 256), MESH8) \
+        == P(None, ("data",))
+    # 1-D leaves always replicate
+    assert rules.param_spec([_key("b")], (129,), MESH8) == P()
+
+
+def test_batch_spec_sequence_parallel_fallback():
+    from jax.sharding import PartitionSpec as P
+    # batch divides -> batch-sharded
+    assert rules.batch_spec((4, 16), MESH8) == P(("data",), None)
+    # batch=1 -> sequence dim takes the DP axes
+    assert rules.batch_spec((1, 16), MESH8) == P(None, ("data",))
+    # neither divides -> fully replicated
+    assert rules.batch_spec((1, 15), MESH8) == P(None, None)
+
+
+# --------------------------------------------------------------------------
+# cross-shape transfer seeding in the autotuner
+# --------------------------------------------------------------------------
+
+def test_autotune_seeds_grid_from_nearest_tuned_neighbor(monkeypatch):
+    monkeypatch.setenv(autotune.ENV_MAX_CANDIDATES, "3")
+    monkeypatch.setenv(autotune.ENV_REPEATS, "1")
+    # a fresh cache has no neighbors: no seeding
+    order = []
+
+    def timer(op, m, n, k, dtype, backend, blocks):
+        order.append(blocks)
+        return 1.0
+
+    before = autotune.STATS.seeded
+    autotune.autotune_blocks("matmul", 32, 16, 16, jnp.float32, "pallas",
+                             timer=timer)
+    assert autotune.STATS.seeded == before
+    # tune a tiny neighbor for real (interpret-safe) under the named policy
+    with repro.use(blocks_policy="autotune"):
+        winner = dispatch.resolve_blocks("matmul", 16, 16, 16, jnp.float32,
+                                         backend="pallas")
+    assert autotune.nearest_tuned_neighbor(
+        "matmul", 32, 16, 16, jnp.float32, "pallas") == winner
+    # the next search on a nearby shape measures the neighbor's winner
+    # first, ahead of the heuristic
+    order.clear()
+    got = autotune.autotune_blocks("matmul", 32, 16, 16, jnp.float32,
+                                   "pallas", timer=timer)
+    assert autotune.STATS.seeded == before + 1
+    assert order[0] == winner
+    assert got == winner  # flat costs: ties keep the seeded candidate
+
+
+def test_neighbor_ignores_other_ops_dtypes_and_heuristic_entries():
+    # heuristic entries are not measured winners -> never seed
+    dispatch.resolve_blocks("matmul", 16, 16, 16, jnp.float32,
+                            backend="pallas")
+    assert autotune.nearest_tuned_neighbor(
+        "matmul", 32, 16, 16, jnp.float32, "pallas") is None
+
+
+# --------------------------------------------------------------------------
+# consumers capture the mesh at trace time
+# --------------------------------------------------------------------------
+
+def test_train_step_captures_explicit_and_annotate_mesh(monkeypatch):
+    from repro import configs
+    from repro.train import optimizer as opt
+    from repro.train import train_step as ts
+
+    seen = []
+
+    def fake_loss(params, batch, cfg):
+        seen.append(dispatch.current_context().mesh)
+        return params["w"].sum(), {}
+
+    monkeypatch.setattr(ts.api, "loss_fn", fake_loss)
+    cfg = configs.get("smollm-135m").reduced()
+    ocfg = opt.AdamWCfg()
+    state = {"opt": opt.adamw_init({"w": jnp.ones((4,), jnp.float32)},
+                                   ocfg)}
+    batch = {"tokens": jnp.zeros((1,), jnp.int32)}
+
+    ts.make_train_step(cfg, ocfg, mesh=MESH8)(state, batch)
+    assert seen[-1] is MESH8
+    # unset mesh falls back to the launcher-installed one at trace time
+    with annotate.use_rules(lambda x, kind: None, MESH8):
+        ts.make_train_step(cfg, ocfg)(state, batch)
+    assert seen[-1] is MESH8
+    ts.make_train_step(cfg, ocfg)(state, batch)
+    assert seen[-1] is None
+
+
+def test_serve_tier_context_mesh_fallback():
+    from repro.serve.engine import _tier_context
+    assert _tier_context(None, None, None)["mesh"] is None
+    with annotate.use_rules(lambda x, kind: None, MESH8):
+        assert _tier_context(None, None, None)["mesh"] is MESH8
+        other = shlocal.abstract_mesh((4, 2), ("data", "model"))
+        assert _tier_context(None, None, None, mesh=other)["mesh"] is other
+
+
+def test_continuous_engine_resolves_per_shard_blocks():
+    """End to end: the serving tier's jit trace resolves *local* GEMM
+    problems under its mesh — the spy policy sees model-sharded out dims."""
+    from repro import configs
+    from repro.models import api
+    from repro.serve import ContinuousEngine, PoolConfig, Request
+
+    cfg = configs.get("smollm-135m").reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+
+    def run(mesh):
+        calls = []
+
+        def spy(op, m, n, k, dtype, backend):
+            calls.append((op, m, n, k))
+            return blocking.default_blocks(op, m, n, k, dtype)
+
+        eng = ContinuousEngine(
+            cfg, params, PoolConfig(n_slots=1, max_len=16),
+            backend="pallas", interpret=True, blocks_policy=spy, mesh=mesh)
+        eng.serve([Request(prompt=[3, 5, 7], max_tokens=1,
+                           stop_tokens=())])
+        return set(calls)
+
+    meshless = run(None)
+    meshed = run(MESH8)
+    assert meshed != meshless
+    # every meshless matmul out-dim that divides by the model axis shows up
+    # quartered in the meshed trace
+    shrunk = {(op, m, n // 4, k) for op, m, n, k in meshless
+              if op == "matmul" and n % 4 == 0}
+    assert shrunk & meshed
+
+
+# --------------------------------------------------------------------------
+# the dry-run cell records per-shard choices (8 real host devices)
+# --------------------------------------------------------------------------
+
+def test_dryrun_blocks_smoke_on_8way_host_mesh():
+    """Acceptance: a real 8-device host mesh resolves per-shard blocks
+    that differ from the global-shape choice, via the CLI CI uses."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu",
+               PYTHONPATH=str(REPO / "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--blocks-smoke",
+         "--devices", "8"],
+        capture_output=True, text=True, env=env, cwd=str(REPO), timeout=600)
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert '"differs": true' in r.stdout
+    assert "per_shard_differs=" in r.stdout
+
+
+def test_importing_dryrun_does_not_clobber_xla_flags(monkeypatch):
+    """The module must be importable without forcing 512 host devices."""
+    monkeypatch.delenv("XLA_FLAGS", raising=False)
+    import repro.launch.dryrun  # noqa: F401  (idempotent re-import)
+    assert "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", "")
+    # and the gate composes with pre-existing flags
+    monkeypatch.setenv("XLA_FLAGS", "--xla_dump_to=/tmp/x")
+    repro.launch.dryrun.force_host_device_count(8)
+    assert os.environ["XLA_FLAGS"] == (
+        "--xla_dump_to=/tmp/x --xla_force_host_platform_device_count=8")
+    # an existing device-count flag wins over a later request
+    repro.launch.dryrun.force_host_device_count(512)
+    assert "=8" in os.environ["XLA_FLAGS"]

@@ -364,3 +364,57 @@ def test_sampled_serving_runs(dense):
     assert out1 == out2
     assert all(len(v) == 4 for v in out1.values())
     assert all(0 <= t < cfg.vocab for v in out1.values() for t in v)
+
+
+def test_streaming_on_token_callback(dense):
+    """submit(on_token=...) streams each request's tokens in generation
+    order, inside the step that produced them, and stops at finished."""
+    cfg, params = dense
+    prompts = _prompts(cfg, [4, 7, 5], seed=9)
+    ce = ContinuousEngine(cfg, params, PoolConfig(n_slots=2,
+                                                  max_len=MAX_LEN))
+    streamed: dict[int, list] = {}
+    order: list = []
+
+    def on_token(rid, tok, finished):
+        streamed.setdefault(rid, []).append(tok)
+        order.append((rid, tok, finished))
+
+    reqs = [Request(prompt=p, max_tokens=mt, stop_tokens=())
+            for p, mt in zip(prompts, [5, 3, 4])]
+    ids = [ce.submit(r, on_token=on_token) for r in reqs]
+
+    events = []
+    while ce.scheduler.has_work():
+        before = len(order)
+        step_events = ce.step()
+        events += step_events
+        # callbacks fired inside this step, one per event, same order
+        assert order[before:] == step_events
+
+    # per-request streams match the recorded generations, in order
+    for rid in ids:
+        assert streamed[rid] == list(ce.scheduler.finished[rid].generated)
+    # the merged stream is exactly the event stream (generation order)
+    assert order == events
+    # finished fired exactly once per request, as the last event of each
+    for rid in ids:
+        flags = [f for r, _, f in order if r == rid]
+        assert flags == [False] * (len(flags) - 1) + [True]
+    # callbacks are dropped after finish (no leak)
+    assert not ce._on_token
+
+
+def test_on_token_without_callback_unchanged(dense):
+    """Requests without callbacks serve exactly as before (parity of the
+    event stream with a callback-free engine)."""
+    cfg, params = dense
+    prompts = _prompts(cfg, [4, 6], seed=10)
+    reqs = [Request(prompt=p, max_tokens=3, stop_tokens=()) for p in prompts]
+    ce1 = ContinuousEngine(cfg, params, PoolConfig(n_slots=2,
+                                                   max_len=MAX_LEN))
+    ce2 = ContinuousEngine(cfg, params, PoolConfig(n_slots=2,
+                                                   max_len=MAX_LEN))
+    out1 = ce1.serve(reqs)
+    out2 = ce2.serve([dataclasses.replace(r) for r in reqs])
+    assert out1 == out2
