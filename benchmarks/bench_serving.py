@@ -1,4 +1,5 @@
-"""Offline serving throughput: continuous batching vs static batching.
+"""Offline serving throughput: continuous batching vs static batching,
+and the 1-replica vs 2-replica cluster router.
 
 A mixed prompt/output-length workload is served two ways on the same
 reduced decoder config:
@@ -14,6 +15,13 @@ reduced decoder config:
 Both paths count only *useful* tokens (each request's own output length),
 so tokens/s is aggregate goodput.  Engines are warmed on the identical
 workload first so jit compilation never enters the timed run.
+
+The cluster section (also standalone: ``bench_serving.py --cluster``)
+routes the same mixed workload through ``EngineRouter`` with one vs two
+engine replicas (same per-replica pool size, so two replicas are twice
+the slot capacity) and reports aggregate goodput plus wall-clock TTFT
+p50/p99 from each request's router ticket — the queueing delay a client
+actually observes shrinking as replicas are added.
 """
 from __future__ import annotations
 
@@ -29,6 +37,8 @@ from repro.models import api
 from repro.serve import (
     ContinuousEngine,
     Engine,
+    EngineReplica,
+    EngineRouter,
     PoolConfig,
     Request,
     ServeConfig,
@@ -70,6 +80,56 @@ def _run_continuous(ce, prompts, outs):
     out = ce.serve([Request(prompt=p, max_tokens=n, stop_tokens=())
                     for p, n in zip(prompts, outs)])
     assert all(len(v) for v in out.values())
+
+
+def _run_cluster(engines, prompts, outs):
+    """One full workload pass through a fresh router over ``engines``.
+
+    The router is rebuilt per pass (its ticket book is append-only) but the
+    engines — and their jit caches — persist across passes.  Returns the
+    router so the caller can read per-ticket wall-clock TTFT.
+    """
+    router = EngineRouter(
+        [EngineReplica(f"r{i}", eng) for i, eng in enumerate(engines)],
+        max_waiting=len(prompts))
+    out = router.serve([Request(prompt=p, max_tokens=n, stop_tokens=())
+                        for p, n in zip(prompts, outs)])
+    assert all(len(v) for v in out.values())
+    return router
+
+
+def run_cluster():
+    """Cluster goodput + TTFT: 1 replica vs 2 replicas, same workload."""
+    cfg = configs.get("smollm-135m").reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    n_requests, slots = 24, 4
+    prompts, outs = _workload(cfg, n_requests)
+    useful = sum(outs)
+
+    pool = lambda: PoolConfig(n_slots=slots, max_len=MAX_LEN,  # noqa: E731
+                              prefill_bucket=8)
+    engines = [ContinuousEngine(cfg, params, pool()) for _ in range(2)]
+
+    goodput = {}
+    for n_rep in (1, 2):
+        reps = engines[:n_rep]
+        _run_cluster(reps, prompts, outs)            # warm the jits
+        best, router = float("inf"), None
+        for _ in range(3):
+            t0 = time.perf_counter()
+            r = _run_cluster(reps, prompts, outs)
+            dt = time.perf_counter() - t0
+            if dt < best:
+                best, router = dt, r
+        ttfts = sorted(t.ttft_s for t in router.tickets.values()
+                       if t.ttft_s is not None)
+        p50, p99 = np.percentile(ttfts, [50, 99])
+        goodput[n_rep] = useful / best
+        emit(f"serve_cluster_rep{n_rep}_r{n_requests}", best * 1e6,
+             f"{useful / best:.1f}tok/s "
+             f"ttft_p50={p50 * 1e3:.1f}ms p99={p99 * 1e3:.1f}ms")
+    emit(f"serve_cluster_scaling_r{n_requests}", 0.0,
+         f"{goodput[2] / goodput[1]:.2f}x goodput 2rep/1rep")
 
 
 def run():
@@ -114,7 +174,15 @@ def run():
          f"{dt_static / dt_cont:.2f}x "
          f"steps={cont_steps}vs{static_steps}")
 
+    run_cluster()
+
 
 if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--cluster", action="store_true",
+                    help="only the 1- vs 2-replica router section")
+    cli = ap.parse_args()
     print("name,us_per_call,derived")
-    run()
+    run_cluster() if cli.cluster else run()

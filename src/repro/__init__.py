@@ -26,4 +26,4 @@ from repro.core.dispatch import (  # noqa: F401
     use,
 )
 
-__version__ = "1.3.0"
+__version__ = "1.4.0"

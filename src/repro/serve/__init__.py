@@ -1,4 +1,11 @@
-"""Serving runtime: static reference engine + continuous batching."""
+"""Serving runtime: static reference engine, continuous batching, the
+multi-replica router, and the asyncio front-end."""
+from repro.serve.cluster import (  # noqa: F401
+    ClusterRequest,
+    EngineReplica,
+    EngineRouter,
+    least_depth,
+)
 from repro.serve.engine import (  # noqa: F401
     ContinuousEngine,
     Engine,
@@ -6,6 +13,15 @@ from repro.serve.engine import (  # noqa: F401
     ServeConfig,
     completed_lengths,
 )
+from repro.serve.frontend import (  # noqa: F401
+    AsyncFrontend,
+    RequestHandle,
+    RequestResult,
+)
 from repro.serve.kv_cache import SlotKVCache  # noqa: F401
-from repro.serve.metrics import ServeMetrics  # noqa: F401
+from repro.serve.metrics import (  # noqa: F401
+    ClusterMetrics,
+    ServeMetrics,
+    render_prometheus,
+)
 from repro.serve.scheduler import Request, RequestState, Scheduler  # noqa: F401

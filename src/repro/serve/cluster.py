@@ -1,0 +1,362 @@
+"""Multi-replica serving: request router, admission control, deadlines,
+and replica fault handling.
+
+``EngineRouter`` spreads traffic across N ``ContinuousEngine`` replicas,
+each its own serving tier (own ``PoolConfig``, backend, block policy,
+accumulation dtype — e.g. a bf16 high-throughput tier next to an fp32
+quality tier, each capturing its own warm tuning-cache context when its
+jit entries trace).  The router stays pure host-side orchestration: it
+never touches device state, it only drives each replica's
+``submit()/step()/cancel()``.
+
+Routing.  ``policy(replicas, request) -> replica`` picks among the
+healthy candidates; the default is least queue depth (queued + running,
+stable over replica order for ties).  A request may name a ``tier``:
+replicas with that tier label are preferred, and the policy falls back to
+all healthy replicas when none match (tier affinity is a preference, not
+a partition).
+
+Admission control.  ``max_waiting`` bounds the cluster-wide *backlog* —
+requests queued beyond the slots currently free.  At the bound, the
+router either rejects the newcomer (``admission="reject"``, terminal
+status ``"rejected"``) or sheds the lowest-priority waiting request to
+make room (``admission="shed"``; the newcomer itself is shed when nothing
+waiting has lower priority).  Either way the queue never grows without
+bound.
+
+Deadlines.  ``submit(deadline_s=...)`` arms a per-request wall-clock
+deadline (router clock, injectable for tests).  ``step()`` sweeps expired
+requests first: a timed-out request is cancelled *mid-flight* — its KV
+slot frees the same step (``ContinuousEngine.cancel``) — and resolves
+with status ``"timeout"``.
+
+Fault handling.  A replica whose ``step()`` raises is quarantined
+(``healthy=False``, never stepped again) and every request it held —
+waiting or mid-generation — is requeued onto the survivors.  Tokens the
+request already streamed are not re-emitted: the requeued run skips that
+prefix (greedy decoding regenerates it identically; sampled requests may
+legitimately diverge from the dropped prefix).  When the last replica
+fails, stranded requests resolve with status ``"failed"`` and the fault
+propagates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+from repro.serve.engine import ContinuousEngine
+from repro.serve.metrics import ClusterMetrics
+from repro.serve.scheduler import Request
+
+# terminal statuses a routed request can resolve with
+COMPLETED = "completed"
+CANCELLED = "cancelled"
+TIMEOUT = "timeout"
+REJECTED = "rejected"
+SHED = "shed"
+FAILED = "failed"
+
+
+@dataclasses.dataclass
+class EngineReplica:
+    """One engine behind the router: a name, a tier label, health state."""
+    name: str
+    engine: ContinuousEngine
+    tier: Optional[str] = None
+    healthy: bool = True
+    fault: Optional[BaseException] = None
+
+    @property
+    def load(self) -> int:
+        """Queued + running requests (the routing signal)."""
+        s = self.engine.scheduler
+        return s.queue_depth + s.n_running
+
+    @property
+    def backlog(self) -> int:
+        """Waiting requests beyond the slots currently free."""
+        return max(0, self.engine.scheduler.queue_depth
+                   - self.engine.pool.n_free)
+
+
+def least_depth(replicas: Sequence[EngineReplica],
+                request: Request) -> EngineReplica:
+    """Default routing policy: the replica with the fewest queued+running
+    requests; replica order breaks ties (min() is stable)."""
+    return min(replicas, key=lambda r: r.load)
+
+
+@dataclasses.dataclass
+class ClusterRequest:
+    """Router-side lifecycle of one request (its "ticket")."""
+    ticket_id: int
+    request: Request
+    tier: Optional[str]
+    deadline: Optional[float]            # absolute, router clock
+    on_token: Optional[Callable]
+    on_finish: Optional[Callable]
+    replica: Optional[EngineReplica] = None
+    local_id: Optional[int] = None       # request id inside the replica
+    tokens: list = dataclasses.field(default_factory=list)
+    status: Optional[str] = None         # terminal status, None while live
+    finish_reason: Optional[str] = None  # "stop"/"length" or the status
+    attempts: int = 0
+    submit_time: float = 0.0
+    first_token_time: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return self.status is not None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
+
+
+class EngineRouter:
+    """Route requests across engine replicas; see the module docstring.
+
+    Drive it like one engine: ``submit()`` then ``step()`` until
+    ``has_work()`` is False, or ``serve()`` for a whole batch.  ``step()``
+    returns merged ``(ticket_id, token, finished)`` events across every
+    replica stepped.
+    """
+
+    def __init__(self, replicas: Sequence[EngineReplica], *,
+                 policy: Callable[..., EngineReplica] | None = None,
+                 max_waiting: int | None = None,
+                 admission: str = "reject",
+                 priority_fn: Callable[[Request], float] | None = None,
+                 clock: Callable[[], float] = time.monotonic):
+        replicas = list(replicas)
+        if not replicas:
+            raise ValueError("EngineRouter needs at least one replica")
+        names = [r.name for r in replicas]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate replica names: {names}")
+        if admission not in ("reject", "shed"):
+            raise ValueError(f"admission must be 'reject' or 'shed', "
+                             f"got {admission!r}")
+        self.replicas = replicas
+        self.policy = policy or least_depth
+        self.max_waiting = max_waiting
+        self.admission = admission
+        self.priority_fn = priority_fn or (lambda r: r.priority)
+        self.clock = clock
+        self.tickets: dict[int, ClusterRequest] = {}
+        self._next_ticket = 0
+        self._events: list = []
+        self.counters = {"requests_rejected": 0, "requests_shed": 0,
+                         "requests_timeout": 0, "requests_requeued": 0,
+                         "replicas_quarantined": 0}
+
+    # ---------------- routing ----------------
+
+    def healthy_replicas(self, tier: str | None = None
+                         ) -> list[EngineReplica]:
+        live = [r for r in self.replicas if r.healthy]
+        if tier is not None:
+            tiered = [r for r in live if r.tier == tier]
+            if tiered:
+                return tiered
+        return live
+
+    @property
+    def total_backlog(self) -> int:
+        return sum(r.backlog for r in self.replicas if r.healthy)
+
+    # ---------------- submission / admission ----------------
+
+    def submit(self, request: Request, *, tier: str | None = None,
+               deadline_s: float | None = None,
+               on_token: Callable | None = None,
+               on_finish: Callable | None = None) -> int:
+        """Route a request; returns its cluster-wide ticket id.
+
+        ``on_token(ticket_id, token, finished)`` streams tokens exactly as
+        ``ContinuousEngine.submit(on_token=)`` does, but survives a
+        replica requeue (the re-run's duplicate prefix is suppressed).
+        ``on_finish(ticket)`` fires once, on any terminal status —
+        including a synchronous rejection inside this call.  Check
+        ``router.tickets[tid].status`` after submitting: a rejected
+        request is already terminal.
+        """
+        now = self.clock()
+        ticket = ClusterRequest(
+            ticket_id=self._next_ticket, request=request, tier=tier,
+            deadline=None if deadline_s is None else now + deadline_s,
+            on_token=on_token, on_finish=on_finish, submit_time=now)
+        self._next_ticket += 1
+        self.tickets[ticket.ticket_id] = ticket
+        if (self.max_waiting is not None
+                and self.total_backlog >= self.max_waiting
+                and not self._make_room(ticket)):
+            return ticket.ticket_id
+        self._dispatch(ticket)
+        return ticket.ticket_id
+
+    def _make_room(self, ticket: ClusterRequest) -> bool:
+        """Admission control at a full backlog: reject the newcomer, or
+        shed the lowest-priority waiting request to admit it."""
+        if self.admission == "reject":
+            self.counters["requests_rejected"] += 1
+            self._finalize(ticket, REJECTED)
+            return False
+        waiting = [t for t in self.tickets.values()
+                   if not t.done and t.replica is not None
+                   and self._is_waiting(t)]
+        # lowest priority loses; among equals, the newest submission
+        # (shedding old FCFS work for an equal newcomer would churn)
+        victim = min(waiting,
+                     key=lambda t: (self.priority_fn(t.request),
+                                    -t.ticket_id),
+                     default=None)
+        self.counters["requests_shed"] += 1
+        if (victim is None
+                or self.priority_fn(victim.request)
+                >= self.priority_fn(ticket.request)):
+            self._finalize(ticket, SHED)
+            return False
+        self._cancel_ticket(victim, SHED)
+        return True
+
+    def _is_waiting(self, ticket: ClusterRequest) -> bool:
+        return any(s.request_id == ticket.local_id
+                   for s in ticket.replica.engine.scheduler.waiting)
+
+    def _dispatch(self, ticket: ClusterRequest) -> None:
+        live = self.healthy_replicas(ticket.tier)
+        if not live:
+            raise RuntimeError("no healthy replicas left")
+        replica = self.policy(live, ticket.request)
+        ticket.attempts += 1
+        ticket.replica = replica
+        ticket.local_id = replica.engine.submit(
+            ticket.request, on_token=self._bridge(ticket))
+
+    def _bridge(self, ticket: ClusterRequest) -> Callable:
+        """Per-dispatch engine callback: forwards the replica's token
+        stream onto the ticket, skipping the prefix a previous dispatch
+        already emitted (requeue after a replica fault)."""
+        skip = len(ticket.tokens)
+        seen = 0
+
+        def cb(local_id: int, token: int, finished: bool) -> None:
+            nonlocal seen
+            seen += 1
+            if seen > skip:
+                if ticket.first_token_time is None:
+                    ticket.first_token_time = self.clock()
+                ticket.tokens.append(int(token))
+                self._events.append((ticket.ticket_id, int(token),
+                                     finished))
+                if ticket.on_token is not None:
+                    ticket.on_token(ticket.ticket_id, int(token), finished)
+            if finished:
+                state = ticket.replica.engine.scheduler.finished.get(
+                    ticket.local_id)
+                if state is not None:
+                    ticket.finish_reason = state.finish_reason
+                self._finalize(ticket, COMPLETED)
+        return cb
+
+    # ---------------- cancellation / resolution ----------------
+
+    def cancel(self, ticket_id: int, *, status: str = CANCELLED) -> bool:
+        """Cancel a live request (frees its KV slot the same step).
+        Returns False when the id is unknown or already terminal."""
+        ticket = self.tickets.get(ticket_id)
+        if ticket is None or ticket.done:
+            return False
+        self._cancel_ticket(ticket, status)
+        return True
+
+    def _cancel_ticket(self, ticket: ClusterRequest, status: str) -> None:
+        if ticket.replica is not None and ticket.local_id is not None:
+            ticket.replica.engine.cancel(ticket.local_id)
+        self._finalize(ticket, status)
+
+    def _finalize(self, ticket: ClusterRequest, status: str) -> None:
+        if ticket.done:
+            return
+        ticket.status = status
+        if ticket.finish_reason is None:
+            ticket.finish_reason = status
+        if ticket.on_finish is not None:
+            ticket.on_finish(ticket)
+
+    # ---------------- the serving loop ----------------
+
+    def step(self) -> list:
+        """One cluster step: expire deadlines, step every healthy replica
+        with work (quarantining any whose ``step()`` raises and requeuing
+        its in-flight requests onto survivors), and return the merged
+        ``(ticket_id, token, finished)`` events."""
+        self._events = []
+        now = self.clock()
+        for ticket in list(self.tickets.values()):
+            if (not ticket.done and ticket.deadline is not None
+                    and now >= ticket.deadline):
+                self.counters["requests_timeout"] += 1
+                self._cancel_ticket(ticket, TIMEOUT)
+        for replica in self.replicas:
+            if not replica.healthy or not replica.engine.scheduler.has_work():
+                continue
+            try:
+                replica.engine.step()
+            except Exception as exc:
+                self._quarantine(replica, exc)
+        return self._events
+
+    def _quarantine(self, replica: EngineReplica,
+                    exc: BaseException) -> None:
+        replica.healthy = False
+        replica.fault = exc
+        self.counters["replicas_quarantined"] += 1
+        stranded = [t for t in self.tickets.values()
+                    if not t.done and t.replica is replica]
+        if not any(r.healthy for r in self.replicas):
+            for ticket in stranded:
+                self._finalize(ticket, FAILED)
+            raise RuntimeError(
+                f"replica {replica.name!r} failed with no survivors"
+            ) from exc
+        for ticket in stranded:
+            self.counters["requests_requeued"] += 1
+            self._dispatch(ticket)
+
+    def has_work(self) -> bool:
+        return any(r.healthy and r.engine.scheduler.has_work()
+                   for r in self.replicas)
+
+    def serve(self, requests: Sequence[Request], *,
+              tiers: Sequence[str | None] | None = None,
+              deadline_s: float | None = None) -> dict[int, list[int]]:
+        """Route ``requests`` and run the cluster to completion; returns
+        ``{ticket_id: tokens}`` (empty list for rejected/shed/expired
+        requests — check ``tickets[tid].status``)."""
+        tiers = tiers if tiers is not None else [None] * len(requests)
+        ids = [self.submit(r, tier=t, deadline_s=deadline_s)
+               for r, t in zip(requests, tiers)]
+        while self.has_work():
+            self.step()
+        return {tid: list(self.tickets[tid].tokens) for tid in ids}
+
+    # ---------------- metrics ----------------
+
+    def metrics(self) -> ClusterMetrics:
+        """Live cluster metrics: per-replica ``ServeMetrics`` (aggregate
+        with ``ClusterMetrics.merge``), instantaneous gauges, and the
+        router's admission/fault counters."""
+        return ClusterMetrics(
+            replicas={r.name: r.engine.metrics for r in self.replicas},
+            gauges={r.name: {
+                "queue_depth": float(r.engine.scheduler.queue_depth),
+                "running": float(r.engine.scheduler.n_running),
+                "slots_free": float(r.engine.pool.n_free),
+                "healthy": 1.0 if r.healthy else 0.0,
+            } for r in self.replicas},
+            counters=dict(self.counters))

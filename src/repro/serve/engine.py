@@ -363,6 +363,9 @@ class ContinuousEngine:
         self.metrics.ttft_count += 1
         finished = self.scheduler.record_token(state, tok,
                                                self.metrics.steps)
+        # first token always lands at admission => wall-clock TTFT is known
+        if state.ttft_s is not None:
+            self.metrics.ttft_s_sum += state.ttft_s
         if finished:
             self._evict(state)
             return state.request_id, tok, True
@@ -375,12 +378,33 @@ class ContinuousEngine:
         return state.request_id, tok, False
 
     def _evict(self, state: RequestState) -> None:
-        slot = state.slot
+        self._release_slot(state.slot)
+        self.metrics.requests_completed += 1
+
+    def _release_slot(self, slot: int) -> None:
         self.pool.free(slot)
         self._tokens[slot] = 0
         self._temps[slot] = 0.0
         self._topk[slot] = 0
-        self.metrics.requests_completed += 1
+
+    def cancel(self, request_id: int) -> bool:
+        """Cancel a waiting or running request mid-flight.
+
+        A running request's KV slot is freed the same step (available to
+        the next admission sweep), so a stuck or departed client no longer
+        holds its slot until ``max_tokens``.  Its streaming callback is
+        dropped without a ``finished=True`` call — cancellation is not a
+        generated token.  Returns False when the id is unknown or already
+        finished.
+        """
+        state = self.scheduler.cancel(request_id, step=self.metrics.steps)
+        if state is None:
+            return False
+        if state.slot is not None:
+            self._release_slot(state.slot)
+        self._on_token.pop(request_id, None)
+        self.metrics.requests_cancelled += 1
+        return True
 
     # ---------------- the serving loop ----------------
 

@@ -1,11 +1,19 @@
 """Step-level serving metrics: throughput, slot occupancy, queue depth,
-and a time-to-first-token proxy measured in scheduler steps.
+time-to-first-token (both a scheduler-step proxy and wall-clock seconds),
+and a Prometheus text exposition for scraping.
 
 All counters are plain host-side ints accumulated by ``ContinuousEngine``;
 ``snapshot()`` renders the derived rates.  "Steps" are engine steps (one
 admission sweep + one batched decode), the natural clock of a
 continuous-batching loop — wall time is tracked separately so tokens/s
 reflects real cost, including prefill work.
+
+For multi-replica serving, ``ClusterMetrics`` carries one ``ServeMetrics``
+per replica plus live router gauges (queue depth, free slots, health) and
+router-level counters (rejected / shed / timeout / requeued);
+``ClusterMetrics.merge`` folds any set of per-replica metrics into one
+cluster-wide ``ServeMetrics``, and ``to_prometheus()`` renders everything
+as one exposition with a ``replica`` label per sample.
 """
 from __future__ import annotations
 
@@ -19,6 +27,7 @@ class ServeMetrics:
     decode_steps: int = 0
     requests_submitted: int = 0
     requests_completed: int = 0
+    requests_cancelled: int = 0
     tokens_generated: int = 0
     # occupancy: occupied-slot decode steps / (n_slots * decode steps)
     slot_steps: int = 0
@@ -26,8 +35,10 @@ class ServeMetrics:
     # queue pressure, sampled at the start of each step
     queue_depth_sum: int = 0
     max_queue_depth: int = 0
-    # time-to-first-token proxy: steps from submit to first sampled token
+    # time-to-first-token: steps from submit to first sampled token, and
+    # the same interval in wall-clock seconds
     ttft_steps_sum: int = 0
+    ttft_s_sum: float = 0.0
     ttft_count: int = 0
     wall_time_s: float = 0.0
 
@@ -50,10 +61,161 @@ class ServeMetrics:
         return (self.ttft_steps_sum / self.ttft_count
                 if self.ttft_count else 0.0)
 
+    def mean_ttft_s(self) -> float:
+        return (self.ttft_s_sum / self.ttft_count
+                if self.ttft_count else 0.0)
+
     def snapshot(self) -> dict:
         out = dataclasses.asdict(self)
         out["occupancy"] = self.occupancy()
         out["tokens_per_s"] = self.tokens_per_s()
         out["mean_queue_depth"] = self.mean_queue_depth()
         out["mean_ttft_steps"] = self.mean_ttft_steps()
+        out["mean_ttft_s"] = self.mean_ttft_s()
         return out
+
+    def to_prometheus(self, labels: dict | None = None) -> str:
+        """Prometheus text exposition of this metrics set (one sample per
+        family, optionally labelled)."""
+        return render_prometheus([(labels or {}, self)])
+
+
+# ==========================================================================
+# Prometheus text exposition
+# ==========================================================================
+
+PROM_PREFIX = "repro_serve_"
+
+# (family suffix, prometheus type, help text, extractor)
+_PROM_SPEC = (
+    ("steps_total", "counter", "Engine steps run.",
+     lambda m: m.steps),
+    ("prefills_total", "counter", "Per-request prefills run.",
+     lambda m: m.prefills),
+    ("decode_steps_total", "counter", "Batched decode steps run.",
+     lambda m: m.decode_steps),
+    ("requests_submitted_total", "counter", "Requests submitted.",
+     lambda m: m.requests_submitted),
+    ("requests_completed_total", "counter", "Requests completed.",
+     lambda m: m.requests_completed),
+    ("requests_cancelled_total", "counter",
+     "Requests cancelled mid-flight (slot freed early).",
+     lambda m: m.requests_cancelled),
+    ("tokens_generated_total", "counter", "Tokens generated.",
+     lambda m: m.tokens_generated),
+    ("wall_time_seconds_total", "counter",
+     "Wall-clock seconds spent inside step().",
+     lambda m: m.wall_time_s),
+    ("occupancy", "gauge",
+     "Occupied-slot fraction of decode capacity.",
+     lambda m: m.occupancy()),
+    ("tokens_per_second", "gauge", "Generated tokens per wall second.",
+     lambda m: m.tokens_per_s()),
+    ("queue_depth_mean", "gauge", "Mean waiting-queue depth per step.",
+     lambda m: m.mean_queue_depth()),
+    ("queue_depth_max", "gauge", "Max waiting-queue depth observed.",
+     lambda m: m.max_queue_depth),
+    ("ttft_steps_mean", "gauge",
+     "Mean time-to-first-token in engine steps.",
+     lambda m: m.mean_ttft_steps()),
+    ("ttft_seconds_mean", "gauge",
+     "Mean wall-clock time-to-first-token in seconds.",
+     lambda m: m.mean_ttft_s()),
+)
+
+
+def _prom_value(v) -> str:
+    f = float(v)
+    return repr(int(f)) if f == int(f) else repr(f)
+
+
+def _prom_labels(labels: dict) -> str:
+    if not labels:
+        return ""
+    esc = {k: str(v).replace("\\", r"\\").replace('"', r'\"')
+           .replace("\n", r"\n") for k, v in labels.items()}
+    return "{" + ",".join(f'{k}="{v}"' for k, v in esc.items()) + "}"
+
+
+def render_prometheus(rows, *, gauges=None, counters=None) -> str:
+    """Render ``rows`` of ``(labels, ServeMetrics)`` as one exposition.
+
+    Each family gets its HELP/TYPE header once, then one sample per row.
+    ``gauges`` adds extra per-row gauge families as
+    ``{family: [(labels, value), ...]}``; ``counters`` adds unlabelled
+    top-level counters as ``{family: value}`` (router-level totals).
+    """
+    lines = []
+    for suffix, ptype, help_, extract in _PROM_SPEC:
+        name = PROM_PREFIX + suffix
+        lines.append(f"# HELP {name} {help_}")
+        lines.append(f"# TYPE {name} {ptype}")
+        for labels, m in rows:
+            lines.append(
+                f"{name}{_prom_labels(labels)} {_prom_value(extract(m))}")
+    for family in sorted(gauges or ()):
+        name = PROM_PREFIX + family
+        lines.append(f"# HELP {name} Live gauge exported by the router.")
+        lines.append(f"# TYPE {name} gauge")
+        for labels, value in gauges[family]:
+            lines.append(f"{name}{_prom_labels(labels)} "
+                         f"{_prom_value(value)}")
+    for family in sorted(counters or ()):
+        name = PROM_PREFIX + family + "_total"
+        lines.append(f"# HELP {name} Router-level counter.")
+        lines.append(f"# TYPE {name} counter")
+        lines.append(f"{name} {_prom_value(counters[family])}")
+    return "\n".join(lines) + "\n"
+
+
+# ==========================================================================
+# cluster aggregation
+# ==========================================================================
+
+@dataclasses.dataclass
+class ClusterMetrics:
+    """Per-replica metrics plus router-level state, as one exposition.
+
+    ``replicas`` maps replica name -> its live ``ServeMetrics``;
+    ``gauges`` maps replica name -> instantaneous router-side gauges
+    (``queue_depth``, ``running``, ``slots_free``, ``healthy``);
+    ``counters`` holds router-level admission/fault totals.
+    """
+
+    replicas: dict
+    gauges: dict = dataclasses.field(default_factory=dict)
+    counters: dict = dataclasses.field(default_factory=dict)
+
+    @staticmethod
+    def merge(metrics) -> ServeMetrics:
+        """Fold an iterable of ``ServeMetrics`` into one cluster-wide set:
+        counters sum; ``max_queue_depth`` takes the max (a max over
+        replicas is still a max); derived rates then fall out of the sums
+        (cluster occupancy weights each replica by its decode capacity)."""
+        out = ServeMetrics()
+        for m in metrics:
+            for f in dataclasses.fields(ServeMetrics):
+                if f.name == "max_queue_depth":
+                    out.max_queue_depth = max(out.max_queue_depth,
+                                              m.max_queue_depth)
+                else:
+                    setattr(out, f.name,
+                            getattr(out, f.name) + getattr(m, f.name))
+        return out
+
+    def aggregate(self) -> ServeMetrics:
+        return self.merge(self.replicas.values())
+
+    def to_prometheus(self) -> str:
+        """One exposition: every ``ServeMetrics`` family sampled per
+        replica (``replica="<name>"``), the live router gauges per
+        replica, and the router-level totals."""
+        rows = [({"replica": name}, m)
+                for name, m in sorted(self.replicas.items())]
+        gauges: dict = {}
+        for name in sorted(self.gauges):
+            for family, value in self.gauges[name].items():
+                gauges.setdefault(family, []).append(
+                    ({"replica": name}, value))
+        return render_prometheus(rows, gauges=gauges,
+                                 counters=self.counters)

@@ -2,20 +2,24 @@
 
 Pure host-side bookkeeping (no jax): requests queue on submission, are
 admitted into KV-cache slots as capacity frees up (FCFS by default, with a
-priority hook), and are evicted the step they finish (stop token, or
-``max_tokens``).  The engine drives it:
+priority hook), and are evicted the step they finish (stop token,
+``max_tokens``, or ``cancel()``).  The engine drives it:
 
     state = scheduler.next_waiting()     # admission order
     scheduler.start(state, slot, step)   # after prefill
     scheduler.record_token(state, tok, step)  # True => finished + evicted
+    scheduler.cancel(request_id, step=step)   # waiting or running
 
 The scheduler never touches device state; slot recycling is the engine's
-job (``SlotKVCache.free``).
+job (``SlotKVCache.free``).  Wall-clock stamps (``submit_time``,
+``first_token_time``) are recorded on each state so time-to-first-token
+can be reported in seconds, not just scheduler steps.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Any, Callable, Optional, Sequence
 
 WAITING, RUNNING, FINISHED = "waiting", "running", "finished"
@@ -54,7 +58,16 @@ class RequestState:
     admit_step: Optional[int] = None
     first_token_step: Optional[int] = None
     finish_step: Optional[int] = None
-    finish_reason: Optional[str] = None   # "stop" | "length"
+    finish_reason: Optional[str] = None   # "stop" | "length" | "cancelled"
+    submit_time: float = 0.0              # wall clock (time.perf_counter)
+    first_token_time: Optional[float] = None
+
+    @property
+    def ttft_s(self) -> Optional[float]:
+        """Wall-clock time-to-first-token in seconds (None before it)."""
+        if self.first_token_time is None:
+            return None
+        return self.first_token_time - self.submit_time
 
 
 class Scheduler:
@@ -77,12 +90,14 @@ class Scheduler:
     # ---------------- submission / admission ----------------
 
     def submit(self, request: Request, *, stop_tokens: tuple = (),
-               step: int = 0) -> int:
+               step: int = 0, now: float | None = None) -> int:
         """Queue a request; returns its id.  ``stop_tokens`` is the
         engine-resolved stop set (request override already applied)."""
         state = RequestState(request=request, request_id=self._next_id,
                              stop_tokens=tuple(stop_tokens),
-                             submit_step=step)
+                             submit_step=step,
+                             submit_time=(time.perf_counter()
+                                          if now is None else now))
         self._next_id += 1
         self.waiting.append(state)
         return state.request_id
@@ -106,12 +121,14 @@ class Scheduler:
     # ---------------- token accounting / eviction ----------------
 
     def record_token(self, state: RequestState, token: int,
-                     step: int) -> bool:
+                     step: int, now: float | None = None) -> bool:
         """Append a generated token; returns True when the request is
         finished (and has been moved out of ``running``)."""
         state.generated.append(int(token))
         if state.first_token_step is None:
             state.first_token_step = step
+            state.first_token_time = (time.perf_counter()
+                                      if now is None else now)
         reason = None
         if int(token) in state.stop_tokens:
             reason = "stop"
@@ -129,6 +146,26 @@ class Scheduler:
         if state.slot is not None:
             self.running.pop(state.slot, None)
         self.finished[state.request_id] = state
+
+    def cancel(self, request_id: int, *, step: int = 0
+               ) -> RequestState | None:
+        """Cancel a waiting *or* running request (same-step eviction).
+
+        Returns the cancelled state (``finish_reason="cancelled"``) so the
+        caller can free its KV slot (``state.slot``, set only if it was
+        running), or None when the id is unknown or already finished —
+        a cancelled request never leaks its slot until ``max_tokens``.
+        """
+        for state in self.waiting:
+            if state.request_id == request_id:
+                self.waiting.remove(state)
+                self._finish(state, "cancelled", step)
+                return state
+        for state in list(self.running.values()):
+            if state.request_id == request_id:
+                self._finish(state, "cancelled", step)
+                return state
+        return None
 
     # ---------------- introspection ----------------
 

@@ -1,4 +1,4 @@
-"""Serving smoke for CI: continuous batching at the autotuned pallas tier.
+"""Serving smokes for CI.
 
 ``python -m repro.serve.smoke`` serves a handful of mixed-length requests
 through ``ContinuousEngine`` with ``backend="pallas"`` in interpret mode and
@@ -6,6 +6,14 @@ through ``ContinuousEngine`` with ``backend="pallas"`` in interpret mode and
 how many block candidates were actually measured — zero on a warm persisted
 ``REPRO_TUNING_CACHE`` (``measured=0 cache=hit``, what CI asserts on the
 second run).
+
+``python -m repro.serve.smoke --frontend`` exercises the async serving
+front-end instead: two engine replicas on different tiers behind an
+``EngineRouter``, one replica hit by an injected ``step()`` fault
+mid-service.  The smoke asserts the replica is quarantined, its in-flight
+requests requeue onto the survivor, and *every* submitted request still
+resolves ``completed`` through its awaitable handle — then prints the
+Prometheus exposition line count as a sanity check on metrics export.
 """
 from __future__ import annotations
 
@@ -13,30 +21,15 @@ import argparse
 import os
 from typing import Sequence
 
-import jax
-import numpy as np
 
-
-def main(argv: Sequence[str] | None = None) -> None:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--arch", default="smollm-135m")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--n-slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=32)
-    ap.add_argument("--candidates", type=int, default=None,
-                    help="cap the measured candidate count per search")
-    ap.add_argument("--repeats", type=int, default=None)
-    args = ap.parse_args(argv)
+def _continuous_smoke(args) -> None:
+    import jax
+    import numpy as np
 
     from repro import configs
     from repro.core import autotune
     from repro.models import api
     from repro.serve import ContinuousEngine, PoolConfig, Request
-
-    if args.candidates is not None:
-        os.environ[autotune.ENV_MAX_CANDIDATES] = str(args.candidates)
-    if args.repeats is not None:
-        os.environ[autotune.ENV_REPEATS] = str(args.repeats)
 
     cfg = configs.get(args.arch).reduced()
     params = api.init_params(jax.random.PRNGKey(0), cfg)
@@ -62,6 +55,99 @@ def main(argv: Sequence[str] | None = None) -> None:
           f"measured={measured} cache={'hit' if hit else 'miss'}")
     if completed != len(requests):
         raise SystemExit(f"only {completed}/{len(requests)} completed")
+
+
+def _frontend_smoke(args) -> None:
+    import asyncio
+
+    import jax
+    import numpy as np
+
+    from repro import configs
+    from repro.models import api
+    from repro.serve import (AsyncFrontend, ContinuousEngine, EngineReplica,
+                             EngineRouter, PoolConfig, Request)
+
+    cfg = configs.get(args.arch).reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    pool = lambda: PoolConfig(n_slots=args.n_slots,  # noqa: E731
+                              max_len=args.max_len)
+    # two tiers: default accumulation next to an explicit bf16-accum tier
+    flaky = ContinuousEngine(cfg, params, pool(), accum_dtype="bfloat16")
+    calls = [0]
+    orig_step = flaky.step
+
+    def injected_fault():
+        calls[0] += 1
+        if calls[0] == args.fail_at_step:
+            raise RuntimeError("injected replica fault")
+        return orig_step()
+    flaky.step = injected_fault
+
+    router = EngineRouter(
+        [EngineReplica("stable", ContinuousEngine(cfg, params, pool()),
+                       tier="fp32"),
+         EngineReplica("flaky", flaky, tier="bf16")],
+        max_waiting=4 * args.requests)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(prompt=rng.integers(0, cfg.vocab, 3 + i % 7).tolist(),
+                max_tokens=3 + i % 3, stop_tokens=())
+        for i in range(args.requests)
+    ]
+
+    async def main():
+        async with AsyncFrontend(router) as frontend:
+            handles = [await frontend.submit(r) for r in requests]
+            return [await h for h in handles]
+
+    results = asyncio.run(main())
+    completed = sum(1 for r in results if r.status == "completed")
+    tokens = sum(len(r.tokens) for r in results)
+    prom_lines = len(router.metrics().to_prometheus().splitlines())
+    print(f"frontend-smoke arch={args.arch} replicas=2 "
+          f"completed={completed}/{len(requests)} tokens={tokens} "
+          f"quarantined={router.counters['replicas_quarantined']} "
+          f"requeued={router.counters['requests_requeued']} "
+          f"prometheus_lines={prom_lines}")
+    if completed != len(requests):
+        bad = [(r.status, r.finish_reason) for r in results
+               if r.status != "completed"]
+        raise SystemExit(f"only {completed}/{len(requests)} completed: {bad}")
+    if router.counters["replicas_quarantined"] != 1:
+        raise SystemExit("the injected fault did not quarantine a replica")
+    if router.counters["requests_requeued"] < 1:
+        raise SystemExit("no requests were requeued off the failed replica")
+
+
+def main(argv: Sequence[str] | None = None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="smollm-135m")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--n-slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=32)
+    ap.add_argument("--frontend", action="store_true",
+                    help="async front-end smoke: two replicas behind the "
+                         "router, one injected fault, all must complete")
+    ap.add_argument("--fail-at-step", type=int, default=2,
+                    help="with --frontend: replica step() call that raises")
+    ap.add_argument("--candidates", type=int, default=None,
+                    help="cap the measured candidate count per search")
+    ap.add_argument("--repeats", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    from repro.core import autotune
+
+    if args.candidates is not None:
+        os.environ[autotune.ENV_MAX_CANDIDATES] = str(args.candidates)
+    if args.repeats is not None:
+        os.environ[autotune.ENV_REPEATS] = str(args.repeats)
+
+    if args.frontend:
+        _frontend_smoke(args)
+    else:
+        _continuous_smoke(args)
 
 
 if __name__ == "__main__":

@@ -337,6 +337,84 @@ def test_step_events_cover_admission_tokens(dense):
     assert [f for _, f in seen[two]] == [False, False, True]
 
 
+def test_scheduler_cancel_waiting_and_running():
+    s = Scheduler()
+    a = s.submit(Request(prompt=[1], max_tokens=5), stop_tokens=())
+    b = s.submit(Request(prompt=[1], max_tokens=5), stop_tokens=())
+    st = s.next_waiting()
+    s.start(st, slot=0, step=1)
+    # waiting request: leaves the queue, lands in finished
+    cancelled = s.cancel(b, step=2)
+    assert cancelled is not None and cancelled.slot is None
+    assert s.queue_depth == 0
+    assert s.finished[b].finish_reason == "cancelled"
+    assert s.finished[b].finish_step == 2
+    # running request: popped from running, slot reported for freeing
+    cancelled = s.cancel(a, step=3)
+    assert cancelled is not None and cancelled.slot == 0
+    assert not s.running and s.finished[a].finish_reason == "cancelled"
+    # unknown / already-finished ids are a no-op
+    assert s.cancel(a) is None
+    assert s.cancel(99) is None
+
+
+def test_engine_cancel_frees_slot_mid_flight(dense):
+    """cancel() in both states: a waiting request leaves the queue, a
+    running one frees its KV slot the same step (no leak until
+    max_tokens), and the slot is immediately reusable."""
+    cfg, params = dense
+    prompts = _prompts(cfg, [4, 5], seed=11)
+    ce = ContinuousEngine(cfg, params, PoolConfig(n_slots=1,
+                                                  max_len=MAX_LEN))
+    streamed = []
+    r1 = ce.submit(Request(prompt=prompts[0], max_tokens=8,
+                           stop_tokens=()),
+                   on_token=lambda rid, t, f: streamed.append(t))
+    r2 = ce.submit(Request(prompt=prompts[1], max_tokens=8,
+                           stop_tokens=()))
+    ce.step()   # r1 running (holds the only slot), r2 waiting
+    assert ce.scheduler.n_running == 1 and ce.scheduler.queue_depth == 1
+
+    assert ce.cancel(r2)
+    assert ce.scheduler.queue_depth == 0
+    assert ce.scheduler.finished[r2].finish_reason == "cancelled"
+
+    n_streamed = len(streamed)
+    assert ce.cancel(r1)
+    assert ce.pool.n_free == 1          # freed same step, not at max_tokens
+    assert ce.scheduler.finished[r1].finish_reason == "cancelled"
+    assert not ce.scheduler.has_work()
+    assert ce.metrics.requests_cancelled == 2
+    assert not ce._on_token             # callback dropped, no finished call
+    assert len(streamed) == n_streamed
+    assert (ce._temps == 0).all() and (ce._tokens == 0).all()
+
+    assert not ce.cancel(r1)            # already finished
+    assert not ce.cancel(999)           # unknown
+
+    # the freed slot serves new work
+    out = ce.serve([Request(prompt=prompts[0], max_tokens=3,
+                            stop_tokens=())])
+    assert [len(v) for v in out.values()] == [3]
+    assert ce.pool.alloc_count == ce.pool.free_count == 2
+
+
+def test_wall_clock_ttft_recorded(dense):
+    cfg, params = dense
+    prompts = _prompts(cfg, [4, 6], seed=12)
+    ce = ContinuousEngine(cfg, params, PoolConfig(n_slots=2,
+                                                  max_len=MAX_LEN))
+    ce.serve([Request(prompt=p, max_tokens=2, stop_tokens=())
+              for p in prompts])
+    for st in ce.scheduler.finished.values():
+        assert st.ttft_s is not None and st.ttft_s >= 0
+        assert st.first_token_time > st.submit_time > 0
+    assert ce.metrics.ttft_s_sum > 0
+    snap = ce.metrics.snapshot()
+    assert snap["mean_ttft_s"] == pytest.approx(
+        ce.metrics.ttft_s_sum / len(prompts))
+
+
 def test_submit_validation(dense):
     cfg, params = dense
     ce = ContinuousEngine(cfg, params, PoolConfig(n_slots=1,
