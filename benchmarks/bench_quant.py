@@ -1,0 +1,112 @@
+"""Quantized building block: bf16 vs int8 at matched shapes.
+
+Two sections, both through the public ``matmul``/serve surfaces (the same
+dispatch path production code takes):
+
+  * GEMM — decode-shaped problems (small m, large k x n), where the GEMM
+    is weight-streaming-bound and int8 storage halves the bytes per
+    weight panel.  Weights are *calibrated offline*
+    (``quantize_weight`` -> ``QuantizedTensor``) exactly as a serving
+    deployment would ship them; only the per-row activation absmax is
+    dynamic.  Compute-bound shapes (large m) are deliberately absent: on
+    CPU XLA the int8 dot is slower than bf16 there, and the quant tier is
+    a decode-time lever, not a prefill one.
+  * serve — the same reduced smollm workload as ``bench_serving``, decoded
+    once with full-precision params and once with a calibrated int8 param
+    tree through ``ContinuousEngine`` — the tokens/s delta of int8 decode.
+
+On CPU this is a proxy (XLA int8 dot vs bf16 dot); on TPU the same calls
+route to the fused-dequant Pallas kernels.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_serving import MAX_LEN, _run_continuous, _workload
+from benchmarks.common import emit
+from repro import configs
+from repro.core import brgemm
+from repro.core.quantize import calibrate_params, quantize_weight
+from repro.models import api
+from repro.serve import ContinuousEngine, PoolConfig
+
+# (m, n, k) single-token decode projections (m=1 is the canonical decode
+# row) — the weight-streaming-bound regime where int8's halved panel
+# bytes pay off.
+DECODE_SHAPES = ((1, 1024, 1024), (1, 2048, 1024))
+REPEATS = 5
+
+
+def _best_of(fn, *args, repeats=REPEATS):
+    jax.block_until_ready(fn(*args))  # warm / compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run_gemm():
+    rng = np.random.default_rng(0)
+    for m, n, k in DECODE_SHAPES:
+        x = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        w32 = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        flops = 2.0 * m * n * k
+
+        xb = x.astype(jnp.bfloat16)
+        wb = w32.astype(jnp.bfloat16)
+        f_bf16 = jax.jit(lambda xx, ww: brgemm.matmul(xx, ww, backend="xla"))
+        dt_bf16 = _best_of(f_bf16, xb, wb)
+        emit(f"quant_gemm_bf16_{m}x{n}x{k}", dt_bf16 * 1e6,
+             f"{flops / dt_bf16 / 1e9:.1f}GF/s")
+
+        qw = quantize_weight(w32, "int8")
+        f_int8 = jax.jit(lambda xx, ww: brgemm.matmul(xx, ww, backend="xla"))
+        dt_int8 = _best_of(f_int8, x, qw)
+        emit(f"quant_gemm_int8_{m}x{n}x{k}", dt_int8 * 1e6,
+             f"{flops / dt_int8 / 1e9:.1f}GF/s")
+
+        emit(f"quant_gemm_int8_vs_bf16_{m}x{n}x{k}", dt_int8 * 1e6,
+             f"{dt_bf16 / dt_int8:.2f}x")
+
+
+def run_serve():
+    cfg = configs.get("smollm-135m").reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    n_requests, slots = 16, 4
+    prompts, outs = _workload(cfg, n_requests)
+    useful = sum(outs)
+
+    pool = lambda: PoolConfig(n_slots=slots, max_len=MAX_LEN,  # noqa: E731
+                              prefill_bucket=8)
+    results = {}
+    for name, p in (("fp32", params),
+                    ("int8", calibrate_params(params, "int8"))):
+        eng = ContinuousEngine(cfg, p, pool())
+        _run_continuous(eng, prompts, outs)  # warm the jits
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            _run_continuous(eng, prompts, outs)
+            best = min(best, time.perf_counter() - t0)
+        results[name] = best
+        emit(f"quant_serve_{name}_decode_r{n_requests}", best * 1e6,
+             f"{useful / best:.1f}tok/s")
+    emit(f"quant_serve_int8_vs_fp32_r{n_requests}",
+         results["int8"] * 1e6,
+         f"{results['fp32'] / results['int8']:.2f}x")
+
+
+def run():
+    run_gemm()
+    run_serve()
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    run()

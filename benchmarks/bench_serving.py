@@ -174,6 +174,17 @@ def run():
          f"{dt_static / dt_cont:.2f}x "
          f"steps={cont_steps}vs{static_steps}")
 
+    # int8 decode tier: same workload, weights calibrated offline so the
+    # decode GEMMs run the quantized building block (see bench_quant for
+    # the isolated GEMM comparison at production weight shapes).
+    from repro.core.quantize import calibrate_params
+    int8_eng = ContinuousEngine(
+        cfg, calibrate_params(params, "int8"),
+        PoolConfig(n_slots=batch, max_len=MAX_LEN, prefill_bucket=8))
+    dt_int8 = best_of(lambda: _run_continuous(int8_eng, prompts, outs))
+    emit(f"serve_cont_int8_decode_r{n_requests}b{batch}", dt_int8 * 1e6,
+         f"{useful / dt_int8:.1f}tok/s {dt_cont / dt_int8:.2f}x-vs-fp32")
+
     run_cluster()
 
 

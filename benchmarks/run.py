@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV lines.  Mapping to the paper:
   fig10_*  Figure 10 distributed-scaling proxy (collective footprint)
   tune_*   heuristic vs measured-autotune tiles (``--compare-policies``)
   serve_*  continuous-batching vs static-batching serving throughput
+  quant_*  bf16 vs int8 quantized GEMM + int8-decode serving throughput
 
 ``--json out.json`` additionally persists every record (plus platform /
 dispatch metadata) so the BENCH_*.json perf trajectory can be diffed
@@ -39,9 +40,10 @@ def main() -> None:
                     help="with --compare-policies: also compare global-"
                          "shape vs per-shard (local-shape) tuning under a "
                          "device-free mesh of this shape (e.g. 2x4)")
-    ap.add_argument("--only", default=None, metavar="SUBSTR",
+    ap.add_argument("--only", default=None, metavar="SUBSTR[,SUBSTR...]",
                     help="run only benchmark modules whose name contains "
-                         "this substring (e.g. --only attention)")
+                         "one of these comma-separated substrings "
+                         "(e.g. --only attention, --only quant,serving)")
     args = ap.parse_args()
 
     import jax
@@ -50,17 +52,19 @@ def main() -> None:
     from benchmarks import (bench_attention, bench_autotune, bench_brgemm,
                             bench_conv_resnet50, bench_conv_strategies,
                             bench_distributed_proxy, bench_fc, bench_lstm,
-                            bench_serving, common)
+                            bench_quant, bench_serving, common)
 
     mods = [bench_brgemm, bench_conv_strategies, bench_lstm, bench_fc,
             bench_conv_resnet50, bench_attention, bench_distributed_proxy,
-            bench_serving]
+            bench_serving, bench_quant]
     if args.compare_policies:
         mods.append(bench_autotune)
     elif args.mesh:
         ap.error("--mesh requires --compare-policies")
     if args.only:
-        mods = [m for m in mods if args.only in m.__name__]
+        wanted = [s for s in args.only.split(",") if s]
+        mods = [m for m in mods
+                if any(s in m.__name__ for s in wanted)]
         if not mods:
             ap.error(f"--only {args.only!r} matches no benchmark module")
         if args.mesh and bench_autotune not in mods:

@@ -1,11 +1,13 @@
 """repro: batch-reduce GEMM as the single DL building block, on TPU/JAX.
 
 Execution configuration (backend, block policy, accumulation dtype,
-interpret mode) scopes through the context API:
+interpret mode, quantization) scopes through the context API:
 
     import repro
     with repro.use(backend="xla"):
         ...  # every primitive in here routes to the XLA reference path
+    with repro.use(quant="int8"):
+        ...  # GEMMs run the int8 building block, dequant fused in-epilogue
 """
 from repro.core.blocking import (  # noqa: F401
     AttnBlocks,
@@ -25,5 +27,11 @@ from repro.core.dispatch import (  # noqa: F401
     save_cache,
     use,
 )
+from repro.core.quantize import (  # noqa: F401
+    QuantConfig,
+    QuantizedTensor,
+    calibrate_params,
+    quantize_weight,
+)
 
-__version__ = "1.4.0"
+__version__ = "1.5.0"

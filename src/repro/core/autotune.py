@@ -63,7 +63,8 @@ STATS = SearchStats()
 # --------------------------------------------------------------------------
 
 def proxy_runner(op: str, m: int, n: int, k: int, dtype, blocks,
-                 interpret: bool, geometry=None) -> Callable[[], object]:
+                 interpret: bool, geometry=None,
+                 quant=None) -> Callable[[], object]:
     """A zero-arg callable executing ``op`` once with ``blocks``.
 
     Conv and attention are measured on a proxy with the same canonical
@@ -73,7 +74,33 @@ def proxy_runner(op: str, m: int, n: int, k: int, dtype, blocks,
     stride-1 proxy otherwise.  ``flash_attention_bwd`` runs the forward
     once outside the timed callable (residuals are inputs, not work) and
     measures only the fused backward kernels.
+
+    With a ``quant`` config the GEMM proxies run the *quantized* kernels
+    on unit-scale quantized operands — the candidate being timed is the
+    tile the quantized op will actually execute (int8 panels stream half
+    the bytes of bf16, so the winner can differ).
     """
+    if quant is not None and op in ("matmul", "brgemm", "batched_matmul"):
+        from repro.core.quantize import as_quant_config
+        from repro.kernels.brgemm import quant_kernel as QK
+        qcfg = as_quant_config(quant)
+        wdt, adt = qcfg.w_jnp, qcfg.a_jnp
+        ones = functools.partial(jnp.ones, dtype=jnp.float32)
+        if op == "matmul":
+            xq = jnp.ones((m, k), adt)
+            wq = jnp.ones((k, n), wdt)
+            return lambda: QK.matmul_q_pallas(
+                xq, wq, ones((m,)), ones((n,)), blocks=blocks,
+                interpret=interpret)
+        aq = jnp.ones((2, m, k), adt)
+        bq = jnp.ones((2, k, n), wdt)
+        if op == "brgemm":
+            return lambda: QK.brgemm_q_pallas(
+                aq, bq, ones((m,)), ones((n,)), blocks=blocks,
+                interpret=interpret)
+        return lambda: QK.batched_matmul_q_pallas(
+            aq, bq, ones((2, m)), ones((2, n)), blocks=blocks,
+            interpret=interpret)
     if op in ("matmul", "brgemm", "batched_matmul"):
         from repro.kernels.brgemm import kernel as K
         if op == "matmul":
@@ -130,7 +157,7 @@ def proxy_runner(op: str, m: int, n: int, k: int, dtype, blocks,
 
 def measure_candidate(op: str, m: int, n: int, k: int, dtype, backend: str,
                       blocks, repeats: int | None = None,
-                      geometry=None) -> float:
+                      geometry=None, quant=None) -> float:
     """Best-of-``repeats`` wall time (seconds) for one candidate tile.
 
     The first call compiles (or builds the interpreter); only subsequent
@@ -140,7 +167,8 @@ def measure_candidate(op: str, m: int, n: int, k: int, dtype, backend: str,
     repeats = repeats if repeats is not None else int(
         os.environ.get(ENV_REPEATS, DEFAULT_REPEATS))
     fn = proxy_runner(op, m, n, k, dtype, blocks,
-                      dispatch.resolve_interpret(), geometry=geometry)
+                      dispatch.resolve_interpret(), geometry=geometry,
+                      quant=quant)
     jax.block_until_ready(fn())  # warmup / compile
     best = float("inf")
     for _ in range(max(1, repeats)):
@@ -195,7 +223,7 @@ def _prune(candidates: Sequence, heuristic, max_candidates: int) -> list:
 
 
 def autotune_blocks(op: str, m: int, n: int, k: int, dtype, backend: str, *,
-                    geometry=None,
+                    geometry=None, quant=None,
                     max_candidates: int | None = None,
                     repeats: int | None = None,
                     timer: Callable | None = None):
@@ -225,7 +253,7 @@ def autotune_blocks(op: str, m: int, n: int, k: int, dtype, backend: str, *,
         os.environ.get(ENV_MAX_CANDIDATES, DEFAULT_MAX_CANDIDATES))
     if timer is None:
         timer = functools.partial(measure_candidate, repeats=repeats,
-                                  geometry=geometry)
+                                  geometry=geometry, quant=quant)
     grid = blocking.candidate_blocks(op, m, n, k, dtype, geometry=geometry)
     candidates = _prune(grid, heuristic, max_candidates)
     seed = nearest_tuned_neighbor(op, m, n, k, dtype, backend)
@@ -266,12 +294,22 @@ def main(argv: Sequence[str] | None = None) -> None:
                     metavar=("M", "N", "K"),
                     help="the op's canonical tuning triple")
     ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--quant", default=None,
+                    help="quant spec ('int8', 'fp8', or a QuantConfig "
+                         "tag); tunes the quantized kernel variant")
     ap.add_argument("--candidates", type=int, default=None,
                     help="cap the measured candidate count")
     ap.add_argument("--repeats", type=int, default=None)
     args = ap.parse_args(argv)
 
     m, n, k = args.shape
+    qcfg = None
+    dtype = jnp.dtype(args.dtype)
+    if args.quant is not None:
+        from repro.core.quantize import as_quant_config
+        qcfg = as_quant_config(args.quant)
+        # the quantized op tunes on (and keys its cache by) storage dtype
+        dtype = qcfg.w_jnp
     # Env (not an ad-hoc callable) so the search stays under the *named*
     # "autotune" policy — only named-policy entries persist to JSON.
     if args.candidates is not None:
@@ -281,14 +319,15 @@ def main(argv: Sequence[str] | None = None) -> None:
     before = STATS.snapshot()
     with dispatch.use(blocks_policy="autotune"):
         blocks = dispatch.resolve_blocks(
-            args.op, m, n, k, jnp.dtype(args.dtype), backend="pallas")
+            args.op, m, n, k, dtype, backend="pallas", quant=qcfg)
     measured = STATS.measured - before["measured"]
     failed = STATS.failed - before["failed"]
     # Hit/miss by whether a search ran at all — measured==0 alone would
     # also be true for a cold search whose every candidate failed.
     hit = STATS.searches == before["searches"]
-    print(f"autotune op={args.op} shape={m}x{n}x{k} dtype={args.dtype} "
-          f"selected={blocks} failed={failed} measured={measured} "
+    qfield = f" quant={qcfg.tag()}" if qcfg is not None else ""
+    print(f"autotune op={args.op} shape={m}x{n}x{k} dtype={dtype.name}"
+          f"{qfield} selected={blocks} failed={failed} measured={measured} "
           f"cache={'hit' if hit else 'miss'}")
 
 

@@ -304,12 +304,14 @@ def attention_bwd_candidates(
     dp = round_up(d, LANE)
 
     def working_set(bq, bk):
-        # q + dy panels on the q side, k + v on the kv side, all double
-        # buffered; lse + delta stats rows; dq or dk+dv accumulators (the
-        # dk/dv kernel is the larger resident set); scores + ds blocks.
-        panels = (2 * bq * dp + 2 * bk * dp) * itemsize * 2
+        # q + dy + y panels on the q side (y feeds the fused delta in the
+        # dQ kernel), k + v on the kv side, all double buffered; lse +
+        # delta stats rows; dq or dk+dv accumulators (the dk/dv kernel is
+        # the larger resident set) plus the dQ kernel's delta accumulator;
+        # scores + ds blocks.
+        panels = (3 * bq * dp + 2 * bk * dp) * itemsize * 2
         stats = 2 * bq * LANE * 4 * 2
-        accs = 2 * bk * dp * 4 + bq * dp * 4
+        accs = 2 * bk * dp * 4 + bq * dp * 4 + bq * LANE * 4
         return panels + stats + accs + 2 * bq * bk * 4
 
     bqs = [b for b in _steps(8, 256) if b <= round_up(tq, 8) or b == 8]

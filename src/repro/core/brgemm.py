@@ -8,8 +8,11 @@ execution context, and the resolution precedence.
 """
 from repro.kernels.brgemm import (  # noqa: F401
     batched_matmul,
+    batched_matmul_q,
     brgemm,
+    brgemm_q,
     matmul,
+    matmul_q,
     resolve_backend,      # deprecated shim
     set_default_backend,  # deprecated shim
 )

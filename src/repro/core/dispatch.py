@@ -18,11 +18,24 @@ Backend resolution precedence (first set wins):
   3. the ``REPRO_BACKEND`` env var (legacy alias: ``REPRO_BRGEMM_BACKEND``)
   4. hardware default: ``pallas`` on TPU, ``xla`` elsewhere
 
-A backend chosen by tiers 2-4 that is unavailable on the current platform
-(per its capability predicate) falls back deterministically to the highest
-priority available backend for that op.  An explicitly requested backend
-(tier 1) never falls back: it raises instead, so tests and benchmarks fail
-loudly rather than silently measuring the wrong path.
+Between tiers 1 and 2 sits the per-op pin: an ``axis_specs`` entry may be
+a dict ``{"axes": ..., "backend": ...}``, and its ``backend`` wins over the
+context-wide backend for that op only — e.g. pin ``backend="xla"`` for an
+all-gather-heavy row-parallel op while pallas serves the rest.
+
+A backend chosen by tiers 2-4 (including a per-op pin) that is unavailable
+on the current platform (per its capability predicate) falls back
+deterministically to the highest priority available backend for that op.
+An explicitly requested backend (tier 1) never falls back: it raises
+instead, so tests and benchmarks fail loudly rather than silently
+measuring the wrong path.
+
+Quantized execution enters the same way: ``use(quant=...)`` puts a
+``repro.core.quantize.QuantConfig`` on the context; the GEMM entry points
+read it via :func:`resolve_quant` and route to the quantized building
+block (``repro.kernels.brgemm.quant``), and :func:`resolve_blocks` keys
+the tuning cache with the quant tag (int8 tiles have different VMEM
+footprints, so quantized problems tune separately).
 
 Block selection routes through a memoized, shape-keyed tuning cache keyed
 ``(op, backend, m, n, k, dtype, policy)``.  Every op resolves its geometry
@@ -182,13 +195,17 @@ class ExecutionContext:
     ``mesh`` is any object exposing ``axis_names`` and ``shape`` (a real
     ``jax.sharding.Mesh`` or an ``AbstractMesh``); ``axis_specs`` maps op
     names to canonical-triple axis assignments (see
-    ``repro.sharding.local.local_problem``)."""
+    ``repro.sharding.local.local_problem``) or to dicts
+    ``{"axes": triple, "backend": name}`` adding a per-op backend pin;
+    ``quant`` is a ``repro.core.quantize.QuantConfig`` (or None for full
+    precision)."""
     backend: str | None = None
     blocks_policy: str | Callable | None = None
     accum_dtype: Any = None
     interpret: bool | None = None
     mesh: Any = None
     axis_specs: Any = None
+    quant: Any = None
 
 
 _STACK: contextvars.ContextVar[tuple[ExecutionContext, ...]] = \
@@ -200,11 +217,47 @@ _STACK: contextvars.ContextVar[tuple[ExecutionContext, ...]] = \
 _DEPRECATED_GLOBAL_BACKEND: str | None = None
 
 
+def _axis_spec_axes(spec):
+    """The (m, n, k) axis triple of an axis_specs entry, or None.
+
+    An entry is either the bare triple or a dict ``{"axes": triple,
+    "backend": name}``; a dict without ``axes`` pins only the backend and
+    leaves the default axis assignment in force."""
+    if isinstance(spec, dict):
+        return spec.get("axes")
+    return spec
+
+
+def _axis_spec_backend(spec) -> str | None:
+    """The per-op backend pin of an axis_specs entry, or None."""
+    if isinstance(spec, dict):
+        return spec.get("backend")
+    return None
+
+
 def _check_axis_spec(op: str, spec) -> None:
     """An axis spec is one entry per canonical dim: exactly 3 entries,
-    each ``None`` / axis name / tuple of axis names.  A bare string would
-    silently iterate per *character* (every letter an unknown axis ->
-    everything replicates), so reject it loudly here."""
+    each ``None`` / axis name / tuple of axis names — or a dict with
+    ``axes`` (the same triple) and/or ``backend`` (a per-op backend pin).
+    A bare string would silently iterate per *character* (every letter an
+    unknown axis -> everything replicates), so reject it loudly here."""
+    if isinstance(spec, dict):
+        unknown = set(spec) - {"axes", "backend"}
+        if unknown:
+            raise ValueError(
+                f"axis_specs[{op!r}]: unknown key(s) {sorted(unknown)}; "
+                f"a dict entry takes 'axes' and/or 'backend'")
+        backend = spec.get("backend")
+        if backend is not None:
+            _check_backend_name(backend)
+            if backend not in _impls(op):
+                raise ValueError(
+                    f"axis_specs[{op!r}]: backend {backend!r} is not "
+                    f"registered for this op (has: "
+                    f"{', '.join(sorted(_impls(op)))})")
+        spec = spec.get("axes")
+        if spec is None:
+            return
     bad = None
     if isinstance(spec, str) or not hasattr(spec, "__iter__"):
         bad = f"{spec!r} is not a sequence of 3 entries"
@@ -230,7 +283,7 @@ def _check_axis_spec(op: str, spec) -> None:
 def use(*, backend: str | None = None,
         blocks_policy: str | Callable | None = None,
         accum_dtype=None, interpret: bool | None = None,
-        mesh=None, axis_specs=None):
+        mesh=None, axis_specs=None, quant=None):
     """Scope execution configuration: ``with repro.use(backend="xla"): ...``
 
     Only the fields passed are set; everything else inherits from the
@@ -240,9 +293,12 @@ def use(*, backend: str | None = None,
     ``mesh`` makes block resolution *per-shard*: every op's canonical
     (m, n, k) is mapped to the per-device local problem before tuning
     (``repro.sharding.local``), and cache entries carry the mesh
-    signature.  ``axis_specs`` (``{op: (m_axes, n_axes, k_axes)}``)
+    signature.  ``axis_specs`` (``{op: (m_axes, n_axes, k_axes)}`` or
+    ``{op: {"axes": ..., "backend": ...}}`` to also pin a per-op backend)
     overrides how the triple shards — innermost set mapping wins
-    wholesale, it is not merged key-by-key.
+    wholesale, it is not merged key-by-key.  ``quant`` switches the GEMM
+    family to quantized execution (a ``QuantConfig``, dict, or shorthand
+    like ``"int8"``/``"fp8"``; see ``repro.core.quantize``).
 
     Note: a jit-compiled function captures whatever the context resolves to
     at *trace* time; entering a different context later does not retrace
@@ -260,9 +316,14 @@ def use(*, backend: str | None = None,
                 f"{', '.join(sorted(BLOCK_SCHEMAS))}")
         for op_name, spec in axis_specs.items():
             _check_axis_spec(op_name, spec)
+    if quant is not None:
+        # Normalized (and therefore validated) at entry, so every reader
+        # downstream sees a QuantConfig, never a raw spec.
+        from repro.core.quantize import as_quant_config
+        quant = as_quant_config(quant)
     ctx = ExecutionContext(backend=backend, blocks_policy=blocks_policy,
                            accum_dtype=accum_dtype, interpret=interpret,
-                           mesh=mesh, axis_specs=axis_specs)
+                           mesh=mesh, axis_specs=axis_specs, quant=quant)
     token = _STACK.set(_STACK.get() + (ctx,))
     try:
         yield ctx
@@ -274,6 +335,7 @@ def current_context() -> ExecutionContext:
     """The merged view of the active context stack (innermost wins)."""
     backend = _DEPRECATED_GLOBAL_BACKEND
     blocks_policy = accum_dtype = interpret = mesh = axis_specs = None
+    quant = None
     for ctx in _STACK.get():
         backend = ctx.backend if ctx.backend is not None else backend
         blocks_policy = (ctx.blocks_policy if ctx.blocks_policy is not None
@@ -284,9 +346,10 @@ def current_context() -> ExecutionContext:
         mesh = ctx.mesh if ctx.mesh is not None else mesh
         axis_specs = (ctx.axis_specs if ctx.axis_specs is not None
                       else axis_specs)
+        quant = ctx.quant if ctx.quant is not None else quant
     return ExecutionContext(backend=backend, blocks_policy=blocks_policy,
                             accum_dtype=accum_dtype, interpret=interpret,
-                            mesh=mesh, axis_specs=axis_specs)
+                            mesh=mesh, axis_specs=axis_specs, quant=quant)
 
 
 # --------------------------------------------------------------------------
@@ -302,10 +365,17 @@ def _env_backend() -> str | None:
 
 
 def resolve(op: str, backend: str | None = None) -> str:
-    """Resolve the backend name for ``op`` under the precedence order."""
+    """Resolve the backend name for ``op`` under the precedence order:
+    explicit call arg > per-op ``axis_specs`` backend pin > context
+    backend > env var > hardware default.  Only the explicit tier refuses
+    to fall back on unavailability."""
     impls = _impls(op)
     explicit = backend is not None
-    name = (backend or current_context().backend or _env_backend()
+    ctx = current_context()
+    pinned = None
+    if not explicit and ctx.axis_specs is not None:
+        pinned = _axis_spec_backend(ctx.axis_specs.get(op))
+    name = (backend or pinned or ctx.backend or _env_backend()
             or _hardware_default())
     if name not in impls:
         raise ValueError(
@@ -348,11 +418,25 @@ def resolve_interpret(interpret: bool | None = None) -> bool:
 
 
 def resolve_accum_dtype(accum_dtype=None):
-    """Accumulation dtype for the GEMM family: call arg > context > fp32."""
+    """Accumulation dtype for the GEMM family: call arg > context > fp32.
+
+    Orthogonal to ``quant``: with both set, quantized GEMMs use the
+    dtype-implied accumulator (int32 for int8, fp32 for fp8) and
+    ``accum_dtype`` governs the remaining full-precision ops."""
     if accum_dtype is not None:
         return jnp.dtype(accum_dtype)
     ctx = current_context().accum_dtype
     return jnp.dtype(ctx) if ctx is not None else jnp.dtype(jnp.float32)
+
+
+def resolve_quant(quant=None):
+    """The active ``QuantConfig``: call arg > context > None (full
+    precision).  Accepts any spec ``repro.core.quantize.as_quant_config``
+    does."""
+    if quant is not None:
+        from repro.core.quantize import as_quant_config
+        return as_quant_config(quant)
+    return current_context().quant
 
 
 # --------------------------------------------------------------------------
@@ -378,20 +462,21 @@ def register_block_policy(name: str, fn: Callable) -> None:
 
 register_block_policy(
     "heuristic",
-    lambda op, m, n, k, dtype, backend, geometry=None: default_blocks(
-        op, m, n, k, dtype, geometry=geometry))
+    lambda op, m, n, k, dtype, backend, geometry=None, quant=None:
+        default_blocks(op, m, n, k, dtype, geometry=geometry))
 
 
-def _accepts_geometry(fn: Callable) -> bool:
-    """Whether a policy callable takes the optional ``geometry=`` kwarg.
+def _accepts_kwarg(fn: Callable, name: str) -> bool:
+    """Whether a policy callable takes the optional ``name=`` kwarg.
 
-    Pre-geometry policies keep their 6-arg signature working: they are
-    simply called without it (and tune the geometry-agnostic proxy)."""
+    Pre-geometry (and pre-quant) policies keep their 6-arg signature
+    working: they are simply called without the newer kwargs (and tune
+    the geometry-agnostic, full-precision proxy)."""
     try:
         params = inspect.signature(fn).parameters
     except (TypeError, ValueError):  # pragma: no cover - builtins etc.
         return False
-    return "geometry" in params or any(
+    return name in params or any(
         p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values())
 
 
@@ -410,7 +495,7 @@ def _policy_fn(name: str) -> Callable:
 
 
 def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
-                   blocks=None, geometry=None):
+                   blocks=None, geometry=None, quant=None):
     """Block geometry for ``op``: call arg > context policy > heuristic.
 
     ``(m, n, k)`` is the op's canonical tuning triple (GEMM ``m/n/k``, conv
@@ -426,11 +511,19 @@ def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
     measured autotuner's proxy — sees the shard each device actually runs,
     and the cache key gains the mesh signature.
 
+    ``quant`` (a ``QuantConfig`` or tag string) marks a quantized problem:
+    its tag joins the cache key — the same (m, n, k) tunes separately per
+    quant config, since storage dtypes change the candidate grid's VMEM
+    feasibility — and quant-aware policies receive it as a ``quant=``
+    kwarg so the measured proxy runs the quantized kernel.  Callers on
+    the quant path pass the *storage* dtype (int8/fp8) as ``dtype``, so
+    candidate enumeration adapts its sublane/itemsize maths for free.
+
     Policy results are memoized keyed (op, backend, local shapes, dtype,
-    policy, geometry, mesh signature); an explicit ``blocks`` argument
-    bypasses the cache entirely.  When ``REPRO_TUNING_CACHE`` names a
-    file, the cache is loaded from it on first use and written through on
-    every new entry.
+    policy, geometry, mesh signature, quant tag); an explicit ``blocks``
+    argument bypasses the cache entirely.  When ``REPRO_TUNING_CACHE``
+    names a file, the cache is loaded from it on first use and written
+    through on every new entry.
     """
     if blocks is not None:
         return blocks
@@ -451,14 +544,18 @@ def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
         m, n, k = _local.local_problem(op, m, n, k, ctx.mesh,
                                        axis_specs=ctx.axis_specs)
         mesh_sig = _local.mesh_signature(ctx.mesh)
+    quant_tag = quant if (quant is None or isinstance(quant, str)) \
+        else quant.tag()
     key = (op, backend, int(m), int(n), int(k), jnp.dtype(dtype).name,
-           policy_key, geometry, mesh_sig)
+           policy_key, geometry, mesh_sig, quant_tag)
     hit = _TUNING_CACHE.get(key)
     if hit is None:
-        if geometry is not None and _accepts_geometry(policy_fn):
-            hit = policy_fn(op, m, n, k, dtype, backend, geometry=geometry)
-        else:
-            hit = policy_fn(op, m, n, k, dtype, backend)
+        kwargs = {}
+        if geometry is not None and _accepts_kwarg(policy_fn, "geometry"):
+            kwargs["geometry"] = geometry
+        if quant is not None and _accepts_kwarg(policy_fn, "quant"):
+            kwargs["quant"] = quant
+        hit = policy_fn(op, m, n, k, dtype, backend, **kwargs)
         with _TUNING_LOCK:
             _TUNING_CACHE[key] = hit
         env_path = os.environ.get(TUNING_CACHE_ENV)
@@ -493,7 +590,7 @@ def _entry_key(e: dict) -> tuple:
     return (e["op"], e["backend"], int(e["m"]), int(e["n"]), int(e["k"]),
             e["dtype"], e["policy"], e.get("platform"),
             tuple(sorted(geom.items())) if geom else None,
-            tuple(mesh) if mesh else None)
+            tuple(mesh) if mesh else None, e.get("quant"))
 
 
 def save_cache(path: str | None = None) -> int:
@@ -518,9 +615,10 @@ def save_cache(path: str | None = None) -> int:
              "dtype": dtype, "policy": policy, "platform": platform,
              "geometry": geometry.asdict() if geometry is not None else None,
              "mesh": list(mesh_sig) if mesh_sig is not None else None,
+             "quant": quant_tag,
              "blocks": blocks_to_dict(blk)}
-            for (op, backend, m, n, k, dtype, policy, geometry, mesh_sig),
-            blk in _TUNING_CACHE.items()
+            for (op, backend, m, n, k, dtype, policy, geometry, mesh_sig,
+                 quant_tag), blk in _TUNING_CACHE.items()
             if isinstance(policy, str)
         ]
     if os.path.exists(path):
@@ -557,10 +655,13 @@ def load_cache(path: str | None = None) -> int:
                 continue
             try:
                 mesh = e.get("mesh")
+                # .get: files written before the quant field (or by older
+                # repo versions) load as full-precision entries.
                 key = (e["op"], e["backend"], int(e["m"]), int(e["n"]),
                        int(e["k"]), e["dtype"], e["policy"],
                        geometry_from_dict(e.get("geometry")),
-                       tuple(str(a) for a in mesh) if mesh else None)
+                       tuple(str(a) for a in mesh) if mesh else None,
+                       e.get("quant"))
                 blk = blocks_from_dict(e["blocks"])
             except (KeyError, TypeError, ValueError):
                 # Entry written by another repo version (unknown block or

@@ -1,0 +1,288 @@
+"""Quantized execution config + weight/activation quantization helpers.
+
+The successor work to the source paper ("Harnessing Deep Learning and HPC
+Kernels via High-Level Loop and Tensor Abstractions") shows the batch-reduce
+GEMM building block carries low-precision datatypes unchanged: quantization
+is *tuning-surface config*, not a new code path.  This module is that
+config:
+
+  * :class:`QuantConfig` — weight/activation storage dtype, scale
+    granularity, and calibration mode.  It rides on the execution context
+    (``repro.use(quant=...)``), joins the block-tuning cache key via
+    :meth:`QuantConfig.tag`, and is validated in ``core.dispatch``.
+  * :func:`quantize` / :func:`dequantize` — absmax scaling into int8 or
+    fp8 storage, with reduction axes chosen by the caller (per-channel
+    weight scales reduce the contraction dim; per-row activation scales
+    reduce the feature dim).
+  * :class:`QuantizedTensor` — a pre-quantized weight (storage + fp32
+    scales) registered as a pytree node, so calibrated params flow through
+    ``jit``/``lax.scan`` like plain arrays: a scan over stacked per-layer
+    weights slices ``q`` and ``scale`` leaf-wise in lockstep.
+  * :func:`calibrate_params` — offline weight calibration over a param
+    pytree (``repro.quant.calibrate_params`` is the public alias).
+
+The GEMM entry points (``repro.core.brgemm``) consume all of this through
+dispatch — no call-site changes; see ``repro.kernels.brgemm.quant``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# Max representable magnitude per storage dtype; the absmax scale is
+# amax / QMAX so the largest entry lands exactly on the dtype's edge.
+QMAX = {
+    "int8": 127.0,
+    "float8_e4m3fn": 448.0,
+    "float8_e5m2": 57344.0,
+}
+STORAGE_DTYPES = tuple(sorted(QMAX))
+GRANULARITIES = ("per_channel", "per_tensor")
+A_GRANULARITIES = ("per_row", "per_tensor")
+CALIBRATIONS = ("absmax",)
+
+# Scales smaller than this clamp (an all-zero channel) quantize to zeros
+# instead of dividing by zero.
+_SCALE_FLOOR = 1e-30
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Quantized-execution config for the GEMM family.
+
+    ``w_dtype`` / ``a_dtype`` name the weight / activation storage dtypes
+    (int8 or an fp8 flavor).  ``granularity`` scopes the weight scales:
+    ``per_channel`` keeps one fp32 scale per output channel (absmax over
+    the contraction dim), ``per_tensor`` one scale for the whole operand.
+    ``a_granularity`` scopes the dynamic activation scales likewise
+    (``per_row`` = one scale per GEMM row).  ``calibration`` names the
+    scale rule (``absmax`` — scale = absmax / qmax).
+    """
+    w_dtype: str = "int8"
+    a_dtype: str = "int8"
+    granularity: str = "per_channel"
+    a_granularity: str = "per_row"
+    calibration: str = "absmax"
+
+    def __post_init__(self):
+        for field, value, allowed in (
+                ("w_dtype", self.w_dtype, STORAGE_DTYPES),
+                ("a_dtype", self.a_dtype, STORAGE_DTYPES),
+                ("granularity", self.granularity, GRANULARITIES),
+                ("a_granularity", self.a_granularity, A_GRANULARITIES),
+                ("calibration", self.calibration, CALIBRATIONS)):
+            if value not in allowed:
+                raise ValueError(
+                    f"QuantConfig.{field}={value!r}; expected one of "
+                    f"{', '.join(allowed)}")
+
+    def tag(self) -> str:
+        """Stable string form: the tuning-cache key / JSON field."""
+        return (f"{self.w_dtype}:{self.a_dtype}:{self.granularity}:"
+                f"{self.a_granularity}:{self.calibration}")
+
+    @property
+    def w_jnp(self):
+        return jnp.dtype(self.w_dtype)
+
+    @property
+    def a_jnp(self):
+        return jnp.dtype(self.a_dtype)
+
+    @property
+    def integer(self) -> bool:
+        """Whether the accumulator is integer (int8 storage) vs fp32."""
+        return self.w_dtype == "int8" and self.a_dtype == "int8"
+
+
+_SHORTHANDS = {
+    "int8": QuantConfig(),
+    "fp8": QuantConfig(w_dtype="float8_e4m3fn", a_dtype="float8_e4m3fn"),
+}
+
+
+def as_quant_config(spec) -> QuantConfig:
+    """Normalize a quant spec: QuantConfig | dict | shorthand/tag string.
+
+    Strings accept the shorthands ``"int8"`` / ``"fp8"``, a bare storage
+    dtype name, or a full :meth:`QuantConfig.tag` (round-trips).
+    """
+    if isinstance(spec, QuantConfig):
+        return spec
+    if isinstance(spec, dict):
+        return QuantConfig(**spec)
+    if isinstance(spec, str):
+        if spec in _SHORTHANDS:
+            return _SHORTHANDS[spec]
+        if spec in QMAX:
+            return QuantConfig(w_dtype=spec, a_dtype=spec)
+        parts = spec.split(":")
+        if len(parts) == 5:
+            return QuantConfig(*parts)
+        raise ValueError(
+            f"unknown quant spec {spec!r}; expected 'int8', 'fp8', a "
+            f"storage dtype ({', '.join(STORAGE_DTYPES)}), or a "
+            f"QuantConfig tag")
+    raise TypeError(
+        f"quant must be a QuantConfig, dict, or string; got {type(spec)}")
+
+
+# --------------------------------------------------------------------------
+# quantize / dequantize
+# --------------------------------------------------------------------------
+
+def quantize(x, dtype: str = "int8", *, axis=None):
+    """Absmax-quantize ``x``; returns ``(q, scale)`` with fp32 scales.
+
+    ``axis`` gives the reduction axes of the absmax (the dims a single
+    scale covers); ``None`` means one scale for the whole tensor.  The
+    scale tensor drops the reduced axes, so ``q * expand(scale)``
+    reconstructs: for a weight ``(..., k, n)`` with ``axis=-2`` the scale
+    is ``(..., n)`` (per output channel).
+    """
+    if dtype not in QMAX:
+        raise ValueError(f"unknown quant storage dtype {dtype!r}")
+    x32 = jnp.asarray(x).astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, _SCALE_FLOOR) / jnp.float32(QMAX[dtype])
+    q = x32 / scale
+    if dtype == "int8":
+        q = jnp.clip(jnp.round(q), -127.0, 127.0).astype(jnp.int8)
+    else:
+        q = q.astype(jnp.dtype(dtype))
+    if axis is None:
+        return q, scale.reshape(())
+    return q, jnp.squeeze(scale, axis=axis)
+
+
+def dequantize(q, scale):
+    """Inverse of :func:`quantize`: expand the dropped axes and rescale.
+
+    ``scale.ndim == q.ndim - 1`` is per-channel over the last axis
+    (reduced axis was -2); ``q.ndim - 2`` is per-tensor over the trailing
+    matrix dims; equal ranks multiply elementwise.
+    """
+    q32 = jnp.asarray(q).astype(jnp.float32)
+    scale = jnp.asarray(scale).astype(jnp.float32)
+    if scale.ndim == q32.ndim - 1:
+        return q32 * scale[..., None, :]
+    if scale.ndim == q32.ndim - 2:
+        return q32 * scale[..., None, None]
+    return q32 * scale
+
+
+# --------------------------------------------------------------------------
+# pre-quantized weights
+# --------------------------------------------------------------------------
+
+class QuantizedTensor:
+    """A calibrated weight: quantized storage ``q`` + fp32 ``scale``.
+
+    Registered as a pytree node (children: ``q``, ``scale``) so a
+    calibrated param tree passes through ``jit`` and ``lax.scan``
+    unchanged — scanning stacked per-layer weights slices both children
+    in lockstep, yielding a per-layer ``QuantizedTensor``.  Exposes
+    ``shape``/``ndim``/``dtype`` of the storage so GEMM wrappers can read
+    the output dim without special-casing.
+    """
+    __slots__ = ("q", "scale")
+
+    def __init__(self, q, scale):
+        self.q = q
+        self.scale = scale
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    @property
+    def ndim(self):
+        return self.q.ndim
+
+    @property
+    def dtype(self):
+        return self.q.dtype
+
+    def dequantize(self):
+        return dequantize(self.q, self.scale)
+
+    def __repr__(self):
+        return (f"QuantizedTensor(shape={tuple(self.q.shape)}, "
+                f"dtype={self.q.dtype}, scale_shape={tuple(self.scale.shape)})")
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedTensor,
+    lambda t: ((t.q, t.scale), None),
+    lambda aux, children: QuantizedTensor(*children),
+)
+
+
+def quantize_weight(w, quant) -> QuantizedTensor:
+    """Calibrate one GEMM weight ``(..., k, n)`` under ``quant``.
+
+    Per-channel scales reduce the contraction dim only, so stacked
+    per-layer weights ``(L, k, n)`` get per-layer ``(L, n)`` scales —
+    exactly what a ``lax.scan`` slice needs.
+    """
+    qcfg = as_quant_config(quant)
+    if getattr(w, "ndim", 0) < 2:
+        raise ValueError(f"GEMM weight must be >= 2-D; got shape "
+                         f"{getattr(w, 'shape', None)}")
+    axis = (-2,) if qcfg.granularity == "per_channel" else (-2, -1)
+    q, scale = quantize(w, qcfg.w_dtype, axis=axis)
+    return QuantizedTensor(q, scale)
+
+
+# Param names never auto-quantized even though they start with "w": MLA's
+# wkv_b is reshaped/einsum-ed outside the GEMM entry points.
+CALIBRATE_DENYLIST = ("wkv_b",)
+
+
+def _leaf_name(path) -> str | None:
+    for p in reversed(path):
+        if isinstance(p, jax.tree_util.DictKey):
+            return str(p.key)
+    return None
+
+
+def default_calibrate_predicate(path, leaf) -> bool:
+    """Quantize ``w*``-named 2-D+ leaves (GEMM weights by convention);
+    embedding tables, norm scales, and biases keep full precision."""
+    name = _leaf_name(path)
+    return (name is not None and name.startswith("w")
+            and name not in CALIBRATE_DENYLIST
+            and getattr(leaf, "ndim", 0) >= 2)
+
+
+def calibrate_params(params, quant="int8", *, predicate=None):
+    """Quantize the GEMM weights of a param pytree offline.
+
+    Returns the same tree with selected leaves replaced by
+    :class:`QuantizedTensor` (storage + per-channel scales).  The GEMM
+    entry points detect quantized weights and run the quantized building
+    block even without an active ``use(quant=...)`` context — so a
+    calibrated tree is inference-ready as-is, and serving engines skip
+    the per-step dynamic weight absmax.
+
+    ``predicate(path, leaf) -> bool`` overrides leaf selection (default:
+    :func:`default_calibrate_predicate`).  Calibration is inference-only:
+    the quantized path does not define gradients.
+    """
+    qcfg = as_quant_config(quant)
+    pred = predicate if predicate is not None else default_calibrate_predicate
+
+    def visit(path, leaf):
+        if isinstance(leaf, QuantizedTensor):
+            return leaf
+        if pred(path, leaf):
+            return quantize_weight(leaf, qcfg)
+        return leaf
+
+    # is_leaf keeps already-calibrated weights atomic — without it the map
+    # would recurse into the QuantizedTensor pytree and re-quantize its
+    # int8 storage.
+    return jax.tree_util.tree_map_with_path(
+        visit, params, is_leaf=lambda x: isinstance(x, QuantizedTensor))

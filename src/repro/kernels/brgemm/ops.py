@@ -43,6 +43,7 @@ from repro.core.dispatch import (  # noqa: F401  (deprecated shims, re-exported)
     set_default_backend,
 )
 from repro.kernels.brgemm import kernel as K
+from repro.kernels.brgemm import quant as Q
 from repro.kernels.brgemm import ref as R
 
 
@@ -149,10 +150,31 @@ def matmul(
     out_dtype=None,
     backend: str | None = None,
     blocks: Blocks | None = None,
+    quant=None,
 ):
-    """Batch-reduce GEMM over K blocks; x may have any leading dims."""
+    """Batch-reduce GEMM over K blocks; x may have any leading dims.
+
+    Quantized execution is ambient: an active ``repro.use(quant=...)``
+    context, an explicit ``quant=`` spec, or a pre-quantized
+    :class:`~repro.core.quantize.QuantizedTensor` weight routes this call
+    to the int8/fp8 kernel with its fused dequant epilogue — same
+    signature, no call-site changes.
+    """
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
+    qcfg = Q.active_quant(w, quant)
+    if qcfg is not None and quant is None and c0 is not None and beta != 0.0:
+        # Accumulator-chained GEMMs (LSTM gates) have no quantized form;
+        # an *ambient* context degrades them to full precision.  An
+        # explicit quant= arg falls through and raises.
+        qcfg = None
+        if isinstance(w, Q.QuantizedTensor):
+            w = w.dequantize().astype(x.dtype)
+    if qcfg is not None:
+        y = Q.matmul_q(x2, w, bias, c0, activation=activation, alpha=alpha,
+                       beta=beta, out_dtype=out_dtype, backend=backend,
+                       blocks=blocks, qcfg=qcfg)
+        return y.reshape(*lead, w.shape[-1])
     c02 = c0.reshape(-1, c0.shape[-1]) if c0 is not None else None
     impl = dispatch.get_impl("matmul", backend)
     y = impl(x2, w, bias, c02, activation=activation, alpha=alpha,
@@ -239,8 +261,18 @@ def brgemm(
     out_dtype=None,
     backend: str | None = None,
     blocks: Blocks | None = None,
+    quant=None,
 ):
     """The paper's batch-reduce GEMM. a: (B, m, k), b: (B, k, n) -> (m, n)."""
+    qcfg = Q.active_quant(b, quant)
+    if qcfg is not None and quant is None and c0 is not None and beta != 0.0:
+        qcfg = None  # see matmul: ambient quant skips accumulator chains
+        if isinstance(b, Q.QuantizedTensor):
+            b = b.dequantize().astype(a.dtype)
+    if qcfg is not None:
+        return Q.brgemm_q(a, b, bias, c0, activation=activation, alpha=alpha,
+                          beta=beta, out_dtype=out_dtype, backend=backend,
+                          blocks=blocks, qcfg=qcfg)
     impl = dispatch.get_impl("brgemm", backend)
     return impl(a, b, bias, c0, activation=activation, alpha=alpha,
                 beta=beta, out_dtype=out_dtype, blocks=blocks)
@@ -284,8 +316,14 @@ def batched_matmul(
     out_dtype=None,
     backend: str | None = None,
     blocks: Blocks | None = None,
+    quant=None,
 ):
     """Strided-batched GEMM baseline (no cross-batch reduction)."""
+    qcfg = Q.active_quant(b, quant)
+    if qcfg is not None:
+        return Q.batched_matmul_q(a, b, bias, activation=activation,
+                                  alpha=alpha, out_dtype=out_dtype,
+                                  backend=backend, blocks=blocks, qcfg=qcfg)
     impl = dispatch.get_impl("batched_matmul", backend)
     return impl(a, b, bias, activation=activation, alpha=alpha,
                 out_dtype=out_dtype, blocks=blocks)

@@ -1,0 +1,24 @@
+"""Public quantization API: ``repro.quant``.
+
+One import surface for quantized execution:
+
+    import repro
+    from repro import quant
+
+    qparams = quant.calibrate_params(params, "int8")   # offline weights
+    with repro.use(quant="int8"):                      # dynamic activations
+        logits = model.apply(qparams, batch)           # zero call-site changes
+
+See ``repro.core.quantize`` for the config/calibration machinery and
+``repro.kernels.brgemm.quant`` for the quantized building-block kernels.
+"""
+from repro.core.quantize import (  # noqa: F401
+    QuantConfig,
+    QuantizedTensor,
+    as_quant_config,
+    calibrate_params,
+    default_calibrate_predicate,
+    dequantize,
+    quantize,
+    quantize_weight,
+)

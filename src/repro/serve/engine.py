@@ -65,21 +65,22 @@ class ServeConfig:
 
 
 def _tier_context(backend, blocks_policy, accum_dtype, interpret=None,
-                  mesh=None, axis_specs=None):
+                  mesh=None, axis_specs=None, quant=None):
     """The ``dispatch.use`` kwargs of one serving tier, resolved at trace
     time: an unset mesh falls back to whatever the launcher installed via
     ``sharding.annotate.use_rules`` *when the jit entry traces*."""
     return dict(backend=backend, blocks_policy=blocks_policy,
                 accum_dtype=accum_dtype, interpret=interpret,
                 mesh=mesh if mesh is not None else annotate.current_mesh(),
-                axis_specs=axis_specs)
+                axis_specs=axis_specs, quant=quant)
 
 
 class Engine:
     def __init__(self, cfg: ArchCfg, params, scfg: ServeConfig, *,
                  backend: str | None = None,
                  blocks_policy=None, accum_dtype=None,
-                 mesh=None, axis_specs=None):
+                 mesh=None, axis_specs=None,
+                 quant=None, decode_quant=None):
         self.cfg = cfg
         self.params = params
         self.scfg = scfg
@@ -88,18 +89,24 @@ class Engine:
         self.accum_dtype = accum_dtype
         self.mesh = mesh
         self.axis_specs = axis_specs
+        # Per-phase quant tiers: prefill is compute-bound (quantization
+        # rarely pays), decode streams weights (int8 halves the bytes), so
+        # decode_quant defaults to quant but can diverge — the canonical
+        # production mix is quant=None + decode_quant="int8".
+        self.quant = quant
+        self.decode_quant = decode_quant if decode_quant is not None else quant
 
-        def _tier():
+        def _tier(q):
             return _tier_context(self.backend, self.blocks_policy,
                                  self.accum_dtype, mesh=self.mesh,
-                                 axis_specs=self.axis_specs)
+                                 axis_specs=self.axis_specs, quant=q)
 
         def _prefill(p, b, c):
-            with dispatch.use(**_tier()):
+            with dispatch.use(**_tier(self.quant)):
                 return api.prefill(p, b, cfg, c)
 
         def _decode(p, t, c, pos):
-            with dispatch.use(**_tier()):
+            with dispatch.use(**_tier(self.decode_quant)):
                 return api.decode_step(p, t, cfg, c, pos)
 
         self._prefill = jax.jit(_prefill)
@@ -223,6 +230,7 @@ class ContinuousEngine:
                  backend: str | None = None, blocks_policy=None,
                  accum_dtype=None, interpret: bool | None = None,
                  mesh=None, axis_specs=None,
+                 quant=None, decode_quant=None,
                  priority_fn=None, key=None):
         if pool.prefill_bucket is not None and not _supports_bucketing(cfg):
             raise ValueError(
@@ -246,22 +254,26 @@ class ContinuousEngine:
         # request_id -> on_token callback for streaming consumers
         self._on_token: dict[int, Any] = {}
 
-        def tier():
+        # decode is weight-streaming-bound, so it gets its own quant tier
+        # (int8 decode + full-precision prefill is the production mix)
+        decode_quant = decode_quant if decode_quant is not None else quant
+
+        def tier(q):
             # Resolved inside the jit closures, i.e. at *trace* time, so
             # an annotate-installed mesh active when the entry first
             # compiles shapes the tier's block resolution.
             return _tier_context(backend, blocks_policy, accum_dtype,
-                                 interpret, mesh, axis_specs)
+                                 interpret, mesh, axis_specs, quant=q)
 
         batch_axes = self.pool.batch_axes
 
         def _prefill(p, batch, cache, logit_pos):
-            with dispatch.use(**tier()):
+            with dispatch.use(**tier(quant)):
                 return api.prefill(p, batch, cfg, cache,
                                    logit_pos=logit_pos)
 
         def _decode(p, tokens, cache, positions):
-            with dispatch.use(**tier()):
+            with dispatch.use(**tier(decode_quant)):
                 return api.decode_step_slots(p, tokens, cfg, cache,
                                              positions,
                                              batch_axes=batch_axes)

@@ -34,9 +34,14 @@ def _continuous_smoke(args) -> None:
     cfg = configs.get(args.arch).reduced()
     params = api.init_params(jax.random.PRNGKey(0), cfg)
     before = autotune.STATS.snapshot()
+    # --quant: int8 decode tier next to the full-precision prefill tier —
+    # the per-phase context mix production decode runs (decode streams
+    # weights, so int8 halves its bytes; prefill stays compute-bound).
+    decode_quant = "int8" if args.quant else None
     engine = ContinuousEngine(
         cfg, params, PoolConfig(n_slots=args.n_slots, max_len=args.max_len),
-        backend="pallas", blocks_policy="autotune", interpret=True)
+        backend="pallas", blocks_policy="autotune", interpret=True,
+        decode_quant=decode_quant)
 
     rng = np.random.default_rng(0)
     requests = [
@@ -48,7 +53,8 @@ def _continuous_smoke(args) -> None:
     completed = sum(1 for toks in out.values() if toks)
     measured = autotune.STATS.measured - before["measured"]
     hit = autotune.STATS.searches == before["searches"]
-    print(f"serve-smoke arch={args.arch} "
+    qfield = " quant=int8-decode" if args.quant else ""
+    print(f"serve-smoke arch={args.arch}{qfield} "
           f"completed={completed}/{len(requests)} "
           f"tokens={engine.metrics.tokens_generated} "
           f"occupancy={engine.metrics.occupancy():.2f} "
@@ -127,6 +133,10 @@ def main(argv: Sequence[str] | None = None) -> None:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--n-slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=32)
+    ap.add_argument("--quant", action="store_true",
+                    help="serve with an int8 decode tier "
+                         "(decode_quant='int8') next to full-precision "
+                         "prefill")
     ap.add_argument("--frontend", action="store_true",
                     help="async front-end smoke: two replicas behind the "
                          "router, one injected fault, all must complete")

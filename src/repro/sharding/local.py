@@ -122,11 +122,15 @@ def local_problem(op: str, m: int, n: int, k: int, mesh,
     ``axis_specs`` (a mapping ``{op: (m_axes, n_axes, k_axes)}``) overrides
     the defaults per op — e.g. a row-parallel projection passes
     ``{"matmul": (dp_axes, None, "model")}`` so the *contraction* dim
-    localizes instead of the out dim.
+    localizes instead of the out dim.  Dict-valued entries (the
+    ``{"axes": ..., "backend": ...}`` form dispatch accepts) contribute
+    their ``"axes"`` here; a backend-only pin keeps the default axes.
     """
     specs = default_axis_specs(mesh)
-    if axis_specs:
-        specs.update(axis_specs)
+    for op_name, entry in (axis_specs or {}).items():
+        axes = entry.get("axes") if isinstance(entry, dict) else entry
+        if axes is not None or not isinstance(entry, dict):
+            specs[op_name] = axes
     spec = specs.get(op)
     if spec is None:
         return int(m), int(n), int(k)

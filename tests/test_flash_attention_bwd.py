@@ -15,6 +15,7 @@ from repro.kernels.flash_attention import (
 )
 from repro.kernels.flash_attention import ops as FO
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.kernels.flash_attention import bwd as BW
 
 
 def _randn(*shape, dtype=jnp.float32, seed=0):
@@ -310,3 +311,43 @@ def test_conv_geometry_persists_through_cache_file(tmp_path):
     again = dispatch.resolve_blocks("conv2d", 28, 128, 64, jnp.float32,
                                     backend="pallas", geometry=geom)
     assert again == blk
+
+
+# --------------------------------------------------------------------------
+# fused delta precompute (rowsum(dY o Y) inside the dQ kernel's first pass)
+# --------------------------------------------------------------------------
+
+def test_delta_rowsum_standalone_matches_manual():
+    q, k, v = _qkv(seed=70)
+    y = flash_attention_pallas(q, k, v, causal=True, interpret=True)
+    dy = _randn(*q.shape, seed=77)
+    got = BW.delta_rowsum_pallas(y, dy, interpret=True)
+    want = (np.asarray(y, np.float32) * np.asarray(dy, np.float32)).sum(-1)
+    assert got.shape == q.shape[:3] and got.dtype == jnp.float32
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("name,kw,shape", [
+    ("causal", dict(causal=True), dict()),
+    ("windowed", dict(causal=True, window=24), dict()),
+    ("noncausal_ragged", dict(causal=False), dict(tq=40, tk=72)),
+    ("gqa", dict(causal=True), dict(hq=4, hkv=2)),
+])
+def test_fused_delta_matches_standalone_and_leaves_grads_unchanged(
+        name, kw, shape):
+    q, k, v = _qkv(seed=80, **shape)
+    y, lse = flash_attention_pallas(q, k, v, interpret=True,
+                                    return_residuals=True, **kw)
+    dy = _randn(*q.shape, seed=88)
+    dq, dk, dv, delta = BW.flash_attention_bwd_pallas(
+        q, k, v, y, lse, dy, interpret=True, return_delta=True, **kw)
+    # the fused rowsum is the standalone kernel's answer, bit for bit
+    want = BW.delta_rowsum_pallas(y, dy, interpret=True)
+    np.testing.assert_array_equal(np.asarray(delta), np.asarray(want),
+                                  err_msg=name)
+    # and emitting it does not perturb the gradients
+    dq0, dk0, dv0 = BW.flash_attention_bwd_pallas(
+        q, k, v, y, lse, dy, interpret=True, **kw)
+    for g_name, a, b in (("dq", dq, dq0), ("dk", dk, dk0), ("dv", dv, dv0)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{name} {g_name}")

@@ -116,11 +116,11 @@ def test_mesh_signature_joins_cache_key():
         dispatch.resolve_blocks("matmul", 256, 256, 256, jnp.float32,
                                 backend="pallas")
     keys = set(dispatch.tuning_cache_info())
-    sigs = {k[-1] for k in keys}
+    sigs = {k[-2] for k in keys}              # mesh sig sits before quant tag
     assert sigs == {None, ("data", "model")}
     # the meshed entry is keyed by the *local* problem
     assert ("matmul", "pallas", 128, 64, 256, "float32", "heuristic",
-            None, ("data", "model")) in keys
+            None, ("data", "model"), None) in keys
 
 
 def test_cache_transfers_across_mesh_sizes_when_local_shapes_match():

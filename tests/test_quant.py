@@ -1,0 +1,404 @@
+"""Quantized building block: QuantConfig validation, quantize/dequantize
+round-trips, int8-vs-fp32 tolerance bands per op (GEMM, conv-as-GEMM,
+attention projections), pallas<->xla parity, offline calibration,
+quant-tagged tuning-cache keys/persistence, and int8-decode serve parity."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import autotune, dispatch
+from repro.core.quantize import (
+    QuantConfig,
+    QuantizedTensor,
+    as_quant_config,
+    calibrate_params,
+    dequantize,
+    quantize,
+    quantize_weight,
+)
+from repro.kernels.brgemm import batched_matmul, brgemm, matmul
+from repro.kernels.conv2d import conv2d
+
+
+def _randn(*shape, dtype=jnp.float32, seed=0):
+    rng = np.random.default_rng(seed + len(shape))
+    return jnp.asarray(rng.normal(size=shape), dtype)
+
+
+def _rel(got, want):
+    got, want = np.asarray(got, np.float64), np.asarray(want, np.float64)
+    return np.linalg.norm(got - want) / max(np.linalg.norm(want), 1e-30)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    dispatch.clear_tuning_cache()
+    yield
+    dispatch.clear_tuning_cache()
+
+
+# --------------------------------------------------------------------------
+# config
+# --------------------------------------------------------------------------
+
+def test_quant_config_validates_fields():
+    with pytest.raises(ValueError, match="w_dtype"):
+        QuantConfig(w_dtype="int4")
+    with pytest.raises(ValueError, match="granularity"):
+        QuantConfig(granularity="per_block")
+    with pytest.raises(ValueError, match="calibration"):
+        QuantConfig(calibration="percentile")
+    assert QuantConfig().integer
+    assert not QuantConfig(w_dtype="float8_e4m3fn",
+                           a_dtype="float8_e4m3fn").integer
+
+
+def test_as_quant_config_shorthands_and_tag_round_trip():
+    int8 = as_quant_config("int8")
+    assert int8 == QuantConfig()
+    fp8 = as_quant_config("fp8")
+    assert fp8.w_dtype == "float8_e4m3fn"
+    assert as_quant_config("float8_e5m2").a_dtype == "float8_e5m2"
+    assert as_quant_config(int8.tag()) == int8          # tag round-trips
+    assert as_quant_config({"granularity": "per_tensor"}).granularity \
+        == "per_tensor"
+    assert as_quant_config(int8) is int8
+    with pytest.raises(ValueError, match="unknown quant spec"):
+        as_quant_config("int16")
+    with pytest.raises(TypeError):
+        as_quant_config(8)
+
+
+# --------------------------------------------------------------------------
+# quantize / dequantize round-trips
+# --------------------------------------------------------------------------
+
+def test_quantize_round_trip_per_channel():
+    w = _randn(64, 32, seed=1)
+    q, scale = quantize(w, "int8", axis=(-2,))
+    assert q.dtype == jnp.int8 and scale.shape == (32,)
+    # absmax scaling: each entry reconstructs to within half an lsb
+    err = np.abs(np.asarray(dequantize(q, scale)) - np.asarray(w))
+    assert (err <= np.asarray(scale)[None, :] * 0.5 + 1e-7).all()
+
+
+def test_quantize_per_tensor_scalar_scale():
+    w = _randn(16, 8, seed=2)
+    q, scale = quantize(w, "int8", axis=None)
+    assert scale.shape == ()
+    assert _rel(dequantize(q, scale), w) < 0.02
+
+
+def test_quantize_zero_channel_guard():
+    w = np.array(_randn(16, 4, seed=3))
+    w[:, 2] = 0.0                                # an all-zero channel
+    q, scale = quantize(jnp.asarray(w), "int8", axis=(-2,))
+    deq = np.asarray(dequantize(q, scale))
+    assert np.isfinite(deq).all()
+    assert (deq[:, 2] == 0.0).all()
+
+
+def test_quantize_unknown_dtype_and_bad_weight_rank():
+    with pytest.raises(ValueError, match="storage dtype"):
+        quantize(_randn(4, 4), "int4")
+    with pytest.raises(ValueError, match=">= 2-D"):
+        quantize_weight(_randn(8), "int8")
+
+
+# --------------------------------------------------------------------------
+# int8 vs fp32 tolerance bands, per op, through the public entry points
+# --------------------------------------------------------------------------
+
+def test_matmul_int8_band_and_epilogue_fusion():
+    x, w = _randn(24, 48, seed=4), _randn(48, 32, seed=5)
+    bias = _randn(32, seed=6)
+    want = matmul(x, w, bias, activation="gelu", alpha=1.5, backend="xla")
+    got = matmul(x, w, bias, activation="gelu", alpha=1.5, quant="int8")
+    assert _rel(got, want) < 0.03
+    assert not np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_brgemm_int8_band():
+    xs, ws = _randn(3, 16, 32, seed=7), _randn(3, 32, 24, seed=8)
+    want = brgemm(xs, ws, backend="xla")
+    got = brgemm(xs, ws, quant="int8")
+    assert _rel(got, want) < 0.03
+
+
+def test_batched_matmul_int8_band():
+    a, b = _randn(3, 16, 32, seed=9), _randn(3, 32, 8, seed=10)
+    want = batched_matmul(a, b, backend="xla")
+    got = batched_matmul(a, b, quant="int8")
+    assert _rel(got, want) < 0.03
+
+
+def test_conv_as_gemm_int8_band():
+    """im2col patches x reshaped filter IS the conv; quantize that GEMM."""
+    x, w = _randn(2, 6, 6, 3, seed=11), _randn(3, 3, 3, 8, seed=12) * 0.3
+    xn, wn = np.asarray(x), np.asarray(w)
+    patches = np.stack([
+        xn[n, p:p + 3, q:q + 3, :].ravel()
+        for n in range(2) for p in range(4) for q in range(4)])
+    x2, w2 = jnp.asarray(patches), jnp.asarray(wn.reshape(27, 8))
+    want = conv2d(x, w, stride=1, padding=0, backend="xla")
+    gemm32 = matmul(x2, w2, backend="xla").reshape(2, 4, 4, 8)
+    np.testing.assert_allclose(np.asarray(gemm32), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+    got = matmul(x2, w2, quant="int8").reshape(2, 4, 4, 8)
+    assert _rel(got, want) < 0.03
+
+
+def test_attention_projections_quantize_with_zero_call_site_changes():
+    from repro.layers import attention as attn
+    from repro.layers.attention import AttnCfg
+    cfg = AttnCfg(d_model=64, n_heads=4, n_kv_heads=4)
+    p = attn.init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 12, 64)) * 0.5
+    want = attn.apply(p, x, cfg, mode="train")
+    with repro.use(quant="int8"):                # no call-site changes
+        got = attn.apply(p, x, cfg, mode="train")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0.1, atol=0.1)
+    assert not np.array_equal(np.asarray(got), np.asarray(want))
+
+
+# --------------------------------------------------------------------------
+# pallas <-> xla parity on the quantized path
+# --------------------------------------------------------------------------
+
+def test_matmul_q_pallas_xla_parity_with_epilogue():
+    x, w = _randn(24, 48, seed=13), _randn(48, 32, seed=14)
+    bias = _randn(32, seed=15)
+    kw = dict(activation="gelu", alpha=1.5, quant="int8")
+    got = matmul(x, w, bias, backend="pallas", **kw)
+    want = matmul(x, w, bias, backend="xla", **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("op,shapes", [
+    (brgemm, ((3, 16, 32), (3, 32, 24))),
+    (batched_matmul, ((3, 16, 32), (3, 32, 8))),
+])
+def test_rank3_q_pallas_xla_parity(op, shapes):
+    a, b = _randn(*shapes[0], seed=16), _randn(*shapes[1], seed=17)
+    got = op(a, b, backend="pallas", quant="int8")
+    want = op(a, b, backend="xla", quant="int8")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_per_tensor_granularity_parity_and_band():
+    x, w = _randn(16, 64, seed=18), _randn(64, 16, seed=19)
+    q = QuantConfig(granularity="per_tensor", a_granularity="per_tensor")
+    want = matmul(x, w, backend="xla")
+    got_p = matmul(x, w, backend="pallas", quant=q)
+    got_x = matmul(x, w, backend="xla", quant=q)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(got_x),
+                               rtol=1e-5, atol=1e-5)
+    assert _rel(got_x, want) < 0.05              # coarser scales, wider band
+
+
+# --------------------------------------------------------------------------
+# fallbacks and refusals
+# --------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.default_backend() != "cpu",
+                    reason="fp8 pallas gate is CPU-specific")
+def test_fp8_falls_back_to_xla_on_cpu_and_explicit_pallas_refuses():
+    x, w = _randn(8, 32, seed=20), _randn(32, 16, seed=21)
+    got = matmul(x, w, quant="fp8")              # silent xla fallback
+    assert _rel(got, matmul(x, w, backend="xla")) < 0.2
+    with pytest.raises(RuntimeError, match="pallas"):
+        matmul(x, w, quant="fp8", backend="pallas")
+
+
+def test_mixed_int8_fp8_families_unsupported():
+    x, w = _randn(8, 16, seed=22), _randn(16, 8, seed=23)
+    mixed = QuantConfig(w_dtype="int8", a_dtype="float8_e4m3fn")
+    with pytest.raises(NotImplementedError):
+        matmul(x, w, quant=mixed)
+
+
+def test_ambient_quant_degrades_accumulator_chains_explicit_raises():
+    x, w = _randn(8, 16, seed=24), _randn(16, 8, seed=25)
+    c0 = _randn(8, 8, seed=26)
+    want = matmul(x, w, None, c0, beta=1.0, backend="xla")
+    with repro.use(quant="int8"):                # LSTM-gate style chaining
+        got = matmul(x, w, None, c0, beta=1.0, backend="xla")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    with pytest.raises(NotImplementedError):
+        matmul(x, w, None, c0, beta=1.0, quant="int8")
+
+
+# --------------------------------------------------------------------------
+# context resolution
+# --------------------------------------------------------------------------
+
+def test_resolve_quant_precedence_and_nesting():
+    assert dispatch.resolve_quant() is None
+    with repro.use(quant="int8"):
+        assert dispatch.resolve_quant() == QuantConfig()
+        # explicit spec beats the ambient context
+        assert dispatch.resolve_quant("fp8").w_dtype == "float8_e4m3fn"
+        with repro.use(quant="fp8"):
+            assert dispatch.resolve_quant().w_dtype == "float8_e4m3fn"
+        assert dispatch.resolve_quant() == QuantConfig()
+    assert dispatch.resolve_quant() is None
+
+
+# --------------------------------------------------------------------------
+# offline calibration
+# --------------------------------------------------------------------------
+
+def test_calibrate_params_selects_gemm_weights_only():
+    params = {
+        "wq": _randn(16, 16, seed=29),
+        "w_stack": _randn(2, 16, 16, seed=30),
+        "wkv_b": _randn(16, 16, seed=31),        # denylisted (MLA einsum)
+        "bias": _randn(16, seed=32),
+        "norm": {"w": _randn(16, seed=33)},      # 1-D: never quantized
+    }
+    qp = calibrate_params(params, "int8")
+    assert isinstance(qp["wq"], QuantizedTensor)
+    assert isinstance(qp["w_stack"], QuantizedTensor)
+    assert qp["w_stack"].scale.shape == (2, 16)  # per-layer channel scales
+    assert not isinstance(qp["wkv_b"], QuantizedTensor)
+    assert not isinstance(qp["bias"], QuantizedTensor)
+    assert not isinstance(qp["norm"]["w"], QuantizedTensor)
+    # idempotent: re-calibrating leaves QuantizedTensors alone
+    assert calibrate_params(qp, "int8")["wq"] is qp["wq"]
+
+
+def test_calibrated_weight_matches_dynamic_quant_exactly():
+    x, w = _randn(8, 32, seed=34), _randn(32, 16, seed=35)
+    dyn = matmul(x, w, quant="int8")
+    cal = matmul(x, quantize_weight(w, "int8"))  # no context needed
+    np.testing.assert_array_equal(np.asarray(dyn), np.asarray(cal))
+
+
+def test_quantized_tensor_scans_leaf_wise():
+    x = _randn(4, 16, seed=36)
+    ws = _randn(3, 16, 16, seed=37)              # stacked per-layer weights
+    qt = quantize_weight(ws, "int8")
+
+    def body(h, layer_w):
+        return h, matmul(x, layer_w)
+
+    _, ys = jax.lax.scan(body, 0, qt)
+    for i in range(3):
+        want = matmul(x, QuantizedTensor(qt.q[i], qt.scale[i]))
+        np.testing.assert_allclose(np.asarray(ys[i]), np.asarray(want),
+                                   rtol=1e-6, atol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# tuning cache: quant-tagged keys, JSON persistence, back-compat
+# --------------------------------------------------------------------------
+
+def test_quant_tags_key_the_cache_separately(tmp_path):
+    qcfg = as_quant_config("int8")
+    b_fp = dispatch.resolve_blocks("brgemm", 64, 128, 128, jnp.float32,
+                                   backend="pallas")
+    b_q = dispatch.resolve_blocks("brgemm", 64, 128, 128, jnp.int8,
+                                  backend="pallas", quant=qcfg)
+    assert b_fp is not None and b_q is not None
+    keys = list(dispatch.tuning_cache_info())
+    assert len(keys) == 2
+    assert {k[-1] for k in keys} == {None, qcfg.tag()}
+
+    path = tmp_path / "cache.json"
+    dispatch.save_cache(str(path))
+    entries = json.loads(path.read_text())["entries"]
+    assert {e.get("quant") for e in entries} == {None, qcfg.tag()}
+    dispatch.clear_tuning_cache()
+    assert dispatch.load_cache(str(path)) == 2
+    assert set(dispatch.tuning_cache_info()) == set(keys)
+
+
+def test_pre_quant_cache_files_still_load(tmp_path):
+    dispatch.resolve_blocks("brgemm", 64, 128, 128, jnp.float32,
+                            backend="pallas")
+    path = tmp_path / "cache.json"
+    dispatch.save_cache(str(path))
+    doc = json.loads(path.read_text())
+    for e in doc["entries"]:                     # strip the quant field —
+        e.pop("quant", None)                     # the pre-quant file format
+    path.write_text(json.dumps(doc))
+    dispatch.clear_tuning_cache()
+    assert dispatch.load_cache(str(path)) == 1
+    (key,) = dispatch.tuning_cache_info()
+    assert key[-1] is None
+
+
+def test_int8_autotune_measures_then_memoizes():
+    qcfg = as_quant_config("int8")
+    before = autotune.STATS.measured
+
+    def policy(op, m, n, k, dt, be, quant=None):
+        return autotune.autotune_blocks(op, m, n, k, dt, be, quant=quant,
+                                        max_candidates=2, repeats=1)
+
+    with repro.use(blocks_policy=policy):
+        b1 = dispatch.resolve_blocks("brgemm", 64, 128, 128, jnp.int8,
+                                     backend="pallas", quant=qcfg)
+        mid = autotune.STATS.measured
+        b2 = dispatch.resolve_blocks("brgemm", 64, 128, 128, jnp.int8,
+                                     backend="pallas", quant=qcfg)
+    assert mid - before > 0                      # really measured int8 runs
+    assert autotune.STATS.measured == mid        # second resolve is a hit
+    assert b1 == b2
+
+
+# --------------------------------------------------------------------------
+# serving: int8 decode tier
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def dense():
+    from repro import configs
+    from repro.models import api
+    cfg = configs.get("smollm-135m").reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def test_int8_decode_greedy_parity_static_vs_continuous(dense):
+    from repro.serve import (ContinuousEngine, Engine, PoolConfig, Request,
+                             ServeConfig)
+    cfg, params = dense
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in (5, 9, 3, 12)]
+    max_tokens = [6, 4, 8, 3]
+
+    static = Engine(cfg, params, ServeConfig(max_len=32),
+                    decode_quant="int8")
+    want = []
+    for p, mt in zip(prompts, max_tokens):
+        ids = static.generate({"tokens": jnp.asarray([p], jnp.int32)},
+                              n_tokens=mt, stop_tokens=())
+        want.append(np.asarray(ids)[0].tolist())
+
+    cont = ContinuousEngine(cfg, params, PoolConfig(n_slots=2, max_len=32),
+                            decode_quant="int8")
+    out = cont.serve([Request(prompt=p, max_tokens=mt, stop_tokens=())
+                      for p, mt in zip(prompts, max_tokens)])
+    got = [out[i] for i in sorted(out)]
+    assert got == want                           # token-for-token greedy
+
+
+def test_calibrated_params_serve_end_to_end(dense):
+    from repro.serve import ContinuousEngine, PoolConfig, Request
+    cfg, params = dense
+    rng = np.random.default_rng(1)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, 4 + i).tolist(),
+                    max_tokens=3, stop_tokens=()) for i in range(4)]
+    eng = ContinuousEngine(cfg, calibrate_params(params, "int8"),
+                           PoolConfig(n_slots=2, max_len=32))
+    out = eng.serve(reqs)
+    assert sorted(out) == list(range(4))
+    assert all(len(toks) == 3 for toks in out.values())
