@@ -328,7 +328,8 @@ def main(argv: Sequence[str] | None = None) -> None:
     qfield = f" quant={qcfg.tag()}" if qcfg is not None else ""
     print(f"autotune op={args.op} shape={m}x{n}x{k} dtype={dtype.name}"
           f"{qfield} selected={blocks} failed={failed} measured={measured} "
-          f"cache={'hit' if hit else 'miss'}")
+          f"cache={'hit' if hit else 'miss'} "
+          f"cache_errors={dispatch.cache_load_errors()}")
 
 
 if __name__ == "__main__":

@@ -447,6 +447,7 @@ BLOCK_POLICIES: dict[str, Callable] = {}
 _TUNING_CACHE: dict[tuple, Any] = {}
 _TUNING_LOCK = threading.Lock()
 _ENV_CACHE_LOADED = False
+_CACHE_LOAD_ERRORS = 0    # corrupt/unreadable cache files seen this process
 
 
 def register_block_policy(name: str, fn: Callable) -> None:
@@ -560,7 +561,13 @@ def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
             _TUNING_CACHE[key] = hit
         env_path = os.environ.get(TUNING_CACHE_ENV)
         if env_path and isinstance(policy_key, str):
-            save_cache(env_path)
+            try:
+                save_cache(env_path)
+            except OSError as exc:
+                # write-through is best-effort: an unwritable cache path
+                # must not fail the resolve that produced the blocks
+                warnings.warn(f"could not write tuning cache to "
+                              f"{env_path!r}: {exc}")
     return hit
 
 
@@ -568,10 +575,18 @@ def tuning_cache_info() -> dict[tuple, Any]:
     return dict(_TUNING_CACHE)
 
 
+def cache_load_errors() -> int:
+    """How many corrupt/unreadable tuning-cache loads this process has
+    swallowed (or raised, when strict).  Surfaced by the autotune CLI so
+    a silently-ignored bad cache file is still visible to operators."""
+    return _CACHE_LOAD_ERRORS
+
+
 def clear_tuning_cache() -> None:
-    global _ENV_CACHE_LOADED
+    global _ENV_CACHE_LOADED, _CACHE_LOAD_ERRORS
     _TUNING_CACHE.clear()
     _ENV_CACHE_LOADED = False
+    _CACHE_LOAD_ERRORS = 0
 
 
 def _maybe_load_env_cache() -> None:
@@ -581,7 +596,9 @@ def _maybe_load_env_cache() -> None:
     _ENV_CACHE_LOADED = True  # one attempt per process (or per cache clear)
     path = os.environ.get(TUNING_CACHE_ENV)
     if path and os.path.exists(path):
-        load_cache(path)
+        # non-strict: a corrupt/truncated/unknown-schema cache file must
+        # degrade to heuristic blocks, never fail the first resolve
+        load_cache(path, strict=False)
 
 
 def _entry_key(e: dict) -> tuple:
@@ -625,10 +642,17 @@ def save_cache(path: str | None = None) -> int:
         try:
             with open(path) as f:
                 prior = json.load(f).get("entries", [])
-        except (OSError, ValueError):
-            prior = []
+        except (OSError, ValueError, AttributeError):
+            prior = []   # unreadable/corrupt file: overwrite, don't merge
+        if not isinstance(prior, list):
+            prior = []   # unknown schema (entries not a list)
         seen = {_entry_key(e) for e in entries}
-        entries += [e for e in prior if _entry_key(e) not in seen]
+        for e in prior:
+            try:
+                if _entry_key(e) not in seen:
+                    entries.append(e)
+            except (KeyError, TypeError, AttributeError):
+                continue   # junk prior entry: drop it from the rewrite
     tmp = f"{path}.tmp.{os.getpid()}"
     with open(tmp, "w") as f:
         json.dump({"version": 1, "entries": entries}, f, indent=1)
@@ -636,24 +660,51 @@ def save_cache(path: str | None = None) -> int:
     return len(entries)
 
 
-def load_cache(path: str | None = None) -> int:
+def load_cache(path: str | None = None, *, strict: bool = True) -> int:
     """Merge a JSON tuning cache into the in-memory one; returns the number
     of entries actually inserted.  In-memory entries win on key collision
     (they are at least as fresh as the file), and entries measured on a
-    different platform are ignored (their timings don't transfer)."""
+    different platform are ignored (their timings don't transfer).
+
+    A corrupt, truncated, or unknown-schema file raises when ``strict``
+    (the explicit-call default) and otherwise warns and returns 0 — the
+    resolver falls back to heuristic blocks.  The automatic
+    ``REPRO_TUNING_CACHE`` load is non-strict: a bad cache file must
+    degrade performance, not availability.  Either way the failure is
+    counted in :func:`cache_load_errors`.
+    """
     path = path or os.environ.get(TUNING_CACHE_ENV)
     if not path:
         raise ValueError(
             f"no path given and {TUNING_CACHE_ENV} is not set")
-    with open(path) as f:
-        data = json.load(f)
+    global _CACHE_LOAD_ERRORS
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        entries = data.get("entries", ())
+        if not isinstance(entries, (list, tuple)):
+            raise ValueError(
+                f"unknown tuning-cache schema: 'entries' is "
+                f"{type(entries).__name__}, expected a list")
+    except (OSError, ValueError, AttributeError) as exc:
+        # OSError: unreadable; ValueError: truncated / not JSON / bad
+        # schema; AttributeError: top level is not an object
+        with _TUNING_LOCK:
+            _CACHE_LOAD_ERRORS += 1
+        if strict:
+            raise
+        warnings.warn(
+            f"ignoring corrupt tuning cache {path!r} "
+            f"({type(exc).__name__}: {exc}); falling back to heuristic "
+            f"blocks")
+        return 0
     platform = jax.default_backend()
     count = 0
     with _TUNING_LOCK:
-        for e in data.get("entries", ()):
-            if e.get("platform", platform) != platform:
-                continue
+        for e in entries:
             try:
+                if e.get("platform", platform) != platform:
+                    continue
                 mesh = e.get("mesh")
                 # .get: files written before the quant field (or by older
                 # repo versions) load as full-precision entries.
@@ -663,10 +714,11 @@ def load_cache(path: str | None = None) -> int:
                        tuple(str(a) for a in mesh) if mesh else None,
                        e.get("quant"))
                 blk = blocks_from_dict(e["blocks"])
-            except (KeyError, TypeError, ValueError):
+            except (KeyError, TypeError, ValueError, AttributeError):
                 # Entry written by another repo version (unknown block or
-                # geometry kind): skip it rather than fail the whole load;
-                # save_cache preserves it in the file untouched.
+                # geometry kind, or junk that is not an object): skip it
+                # rather than fail the whole load; save_cache preserves
+                # recognizable prior entries in the file untouched.
                 continue
             if key not in _TUNING_CACHE:
                 _TUNING_CACHE[key] = blk

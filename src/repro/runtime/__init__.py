@@ -1,0 +1,14 @@
+"""Runtime services shared by training and serving.
+
+The fault-tolerance primitives here are used in two places: the training
+driver (``run_with_restarts`` around a checkpointed step function) and
+the serving cluster (``repro.serve.health.ClusterHealth`` builds its
+per-step watchdog on ``HeartbeatMonitor`` and its straggler quarantine
+on ``StragglerDetector``), so they are exported at package level.
+"""
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    HeartbeatMonitor,
+    StragglerDetector,
+    WorkerFailure,
+    run_with_restarts,
+)

@@ -14,6 +14,12 @@ driven by a simulated host set so the policies are testable on CPU:
   * ``run_with_restarts`` — the training-driver wrapper: catches worker
     failure, restores the latest checkpoint, rebuilds the data stream at
     the restored step, and continues.
+
+The serving stack reuses the first two for self-healing
+(``repro.serve.health``): one heartbeat host per engine replica — a beat
+immediately before each step attempt makes ``dead_hosts`` the per-step
+hang watchdog — and the straggler detector quarantines replicas that
+drag cluster p99.  Import them via ``repro.runtime``.
 """
 from __future__ import annotations
 

@@ -1,10 +1,27 @@
 """Serving runtime: static reference engine, continuous batching, the
-multi-replica router, and the asyncio front-end."""
+multi-replica router, self-healing (fault classification, retry/backoff,
+health probes, re-admission, fault injection), and the asyncio
+front-end."""
 from repro.serve.cluster import (  # noqa: F401
     ClusterRequest,
     EngineReplica,
     EngineRouter,
     least_depth,
+)
+from repro.serve.faults import (  # noqa: F401
+    FaultClock,
+    FaultInjector,
+    FaultSpec,
+)
+from repro.serve.health import (  # noqa: F401
+    ClusterHealth,
+    FatalError,
+    HealthConfig,
+    ReplicaHungError,
+    ReplicaStragglerError,
+    RetryPolicy,
+    TransientError,
+    classify_failure,
 )
 from repro.serve.engine import (  # noqa: F401
     ContinuousEngine,

@@ -30,13 +30,31 @@ requests first: a timed-out request is cancelled *mid-flight* — its KV
 slot frees the same step (``ContinuousEngine.cancel``) — and resolves
 with status ``"timeout"``.
 
-Fault handling.  A replica whose ``step()`` raises is quarantined
-(``healthy=False``, never stepped again) and every request it held —
+Fault handling.  A replica step failure is first *classified*
+(``serve.health.classify_failure``): transient failures are retried in
+place — bounded attempts with exponential backoff + jitter
+(``retry=RetryPolicy(...)``) — before the replica is condemned; a fatal
+failure (or exhausted retries) quarantines the replica
+(``healthy=False``, not stepped again) and every request it held —
 waiting or mid-generation — is requeued onto the survivors.  Tokens the
 request already streamed are not re-emitted: the requeued run skips that
 prefix (greedy decoding regenerates it identically; sampled requests may
-legitimately diverge from the dropped prefix).  When the last replica
-fails, stranded requests resolve with status ``"failed"`` and the fault
+legitimately diverge from the dropped prefix).
+
+Self-healing.  With ``health=HealthConfig(...)`` quarantine is no longer
+forever: a per-step watchdog (``watchdog_s``, heartbeat check-ins on the
+router clock) turns hangs into quarantines instead of a stuck cluster;
+quarantined replicas with a ``factory`` get periodic health probes — a
+canary generate through a warm-restarted engine — and are re-admitted
+with that fresh engine after ``probes_to_readmit`` consecutive passes
+(traffic drains back via the ordinary least-depth policy); ``max_probes``
+consecutive failures retire a replica permanently.  When a tier loses
+all matching replicas, tier-affinity requests *degrade* to any healthy
+replica (counted in ``requests_degraded``, flagged on the ticket) rather
+than silently; when the whole cluster is down, requests park awaiting a
+re-admission if one is still possible, else resolve with status
+``"failed"``.  Without ``health``, the last replica's death keeps the
+legacy contract: stranded requests resolve ``"failed"`` and the fault
 propagates.
 """
 from __future__ import annotations
@@ -46,6 +64,15 @@ import time
 from typing import Callable, Optional, Sequence
 
 from repro.serve.engine import ContinuousEngine
+from repro.serve.health import (
+    ClusterHealth,
+    HealthConfig,
+    ReplicaHungError,
+    ReplicaStragglerError,
+    RetryPolicy,
+    TRANSIENT,
+    classify_failure,
+)
 from repro.serve.metrics import ClusterMetrics
 from repro.serve.scheduler import Request
 
@@ -60,12 +87,25 @@ FAILED = "failed"
 
 @dataclasses.dataclass
 class EngineReplica:
-    """One engine behind the router: a name, a tier label, health state."""
+    """One engine behind the router: a name, a tier label, health state.
+
+    ``factory`` is the warm-restart hook — a zero-arg callable building a
+    fresh engine of this replica's tier.  With router ``health`` enabled
+    it is what makes re-admission possible: probes canary a fresh
+    ``factory()`` engine, and on re-admission it replaces ``engine``.
+    Replicas without a factory stay quarantined for good (and are retired
+    immediately so drivers don't probe them forever).  ``restarts``
+    counts successful re-admissions; ``retired`` marks a replica that
+    exhausted its probe budget and will never rejoin.
+    """
     name: str
     engine: ContinuousEngine
     tier: Optional[str] = None
     healthy: bool = True
     fault: Optional[BaseException] = None
+    factory: Optional[Callable[[], ContinuousEngine]] = None
+    restarts: int = 0
+    retired: bool = False
 
     @property
     def load(self) -> int:
@@ -102,6 +142,8 @@ class ClusterRequest:
     status: Optional[str] = None         # terminal status, None while live
     finish_reason: Optional[str] = None  # "stop"/"length" or the status
     attempts: int = 0
+    degraded: bool = False               # served off-tier (tier had no
+                                         # healthy replica at dispatch)
     submit_time: float = 0.0
     first_token_time: Optional[float] = None
 
@@ -130,7 +172,10 @@ class EngineRouter:
                  max_waiting: int | None = None,
                  admission: str = "reject",
                  priority_fn: Callable[[Request], float] | None = None,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic,
+                 retry: RetryPolicy | None = None,
+                 health: HealthConfig | None = None,
+                 sleep: Callable[[float], None] = time.sleep):
         replicas = list(replicas)
         if not replicas:
             raise ValueError("EngineRouter needs at least one replica")
@@ -146,12 +191,22 @@ class EngineRouter:
         self.admission = admission
         self.priority_fn = priority_fn or (lambda r: r.priority)
         self.clock = clock
+        self.retry = retry
+        self.health_cfg = health
+        self.health = ClusterHealth(names, health) if health else None
+        self.sleep = sleep
+        self._by_name = {r.name: r for r in replicas}
         self.tickets: dict[int, ClusterRequest] = {}
         self._next_ticket = 0
         self._events: list = []
+        self._pending: list[ClusterRequest] = []   # parked: cluster down,
+                                                   # a re-admission pending
         self.counters = {"requests_rejected": 0, "requests_shed": 0,
                          "requests_timeout": 0, "requests_requeued": 0,
-                         "replicas_quarantined": 0}
+                         "requests_degraded": 0, "retries": 0,
+                         "replicas_quarantined": 0,
+                         "replicas_readmitted": 0,
+                         "probes": 0, "probe_failures": 0}
 
     # ---------------- routing ----------------
 
@@ -227,10 +282,30 @@ class EngineRouter:
         return any(s.request_id == ticket.local_id
                    for s in ticket.replica.engine.scheduler.waiting)
 
+    def _may_recover(self) -> bool:
+        """True while a quarantined replica could still be re-admitted."""
+        return (self.health is not None
+                and any(not r.healthy and not r.retired
+                        and r.factory is not None for r in self.replicas))
+
     def _dispatch(self, ticket: ClusterRequest) -> None:
-        live = self.healthy_replicas(ticket.tier)
+        live = [r for r in self.replicas if r.healthy]
         if not live:
-            raise RuntimeError("no healthy replicas left")
+            if self._may_recover():
+                # cluster momentarily down: park until a probe re-admits
+                # a replica (deadline sweeps still cover parked tickets)
+                self._pending.append(ticket)
+                return
+            self._finalize(ticket, FAILED)
+            return
+        if ticket.tier is not None:
+            tiered = [r for r in live if r.tier == ticket.tier]
+            if not tiered and not ticket.degraded:
+                # tier affinity is a preference: record the degradation
+                # instead of failing (or silently crossing tiers)
+                ticket.degraded = True
+                self.counters["requests_degraded"] += 1
+            live = tiered or live
         replica = self.policy(live, ticket.request)
         ticket.attempts += 1
         ticket.replica = replica
@@ -291,10 +366,13 @@ class EngineRouter:
     # ---------------- the serving loop ----------------
 
     def step(self) -> list:
-        """One cluster step: expire deadlines, step every healthy replica
-        with work (quarantining any whose ``step()`` raises and requeuing
-        its in-flight requests onto survivors), and return the merged
-        ``(ticket_id, token, finished)`` events."""
+        """One cluster step: expire deadlines, run due health probes
+        (re-admitting or retiring quarantined replicas), dispatch parked
+        requests onto whatever is healthy, step every healthy replica
+        with work (transient failures retried in place with backoff;
+        fatal failures, watchdog hangs, and flagged stragglers
+        quarantined, their in-flight requests requeued), and return the
+        merged ``(ticket_id, token, finished)`` events."""
         self._events = []
         now = self.clock()
         for ticket in list(self.tickets.values()):
@@ -302,23 +380,96 @@ class EngineRouter:
                     and now >= ticket.deadline):
                 self.counters["requests_timeout"] += 1
                 self._cancel_ticket(ticket, TIMEOUT)
+        if self.health is not None:
+            self._probe_sweep(now)
+        if self._pending and any(r.healthy for r in self.replicas):
+            pending, self._pending = self._pending, []
+            for ticket in pending:
+                if not ticket.done:
+                    self._dispatch(ticket)
+        durations: dict[str, float] = {}
         for replica in self.replicas:
-            if not replica.healthy or not replica.engine.scheduler.has_work():
+            if not replica.healthy:
                 continue
+            if not replica.engine.scheduler.has_work():
+                if self.health is not None:   # idle check-in: not hung
+                    self.health.beat(replica.name, self.clock())
+                continue
+            self._step_replica(replica, durations)
+        if self.health is not None:
+            for name in self.health.observe_durations(durations):
+                replica = self._by_name[name]
+                if replica.healthy:
+                    self._quarantine(replica, ReplicaStragglerError(
+                        f"replica {name!r} flagged as a straggler "
+                        f"({self.health_cfg.straggler_factor}x median for "
+                        f"{self.health_cfg.straggler_patience} steps)"))
+        if (self.health is not None and self.health.probes
+                and not any(r.healthy for r in self.replicas)):
+            # hard-down but recoverable: advance to the next probe time
+            # instead of busy-spinning serve() (with an injected
+            # sleep=clock.advance this is what makes the loop progress)
+            wait = (min(st.next_at for st in self.health.probes.values())
+                    - self.clock())
+            if wait > 0:
+                self.sleep(wait)
+        return self._events
+
+    def _step_replica(self, replica: EngineReplica,
+                      durations: dict[str, float]) -> None:
+        """Step one replica: transient failures get bounded in-place
+        retries with backoff before quarantine; each attempt checks in
+        with the heartbeat monitor first, and the watchdog verdict is
+        taken right after the attempt returns (beat at start, dead-host
+        check at end = this step's duration against ``watchdog_s``) —
+        per-replica, so one replica's stall cannot stale-out the beats
+        of replicas stepped earlier in the same sweep."""
+        attempts = 0
+        while True:
+            t0 = self.clock()
+            if self.health is not None:
+                self.health.beat(replica.name, t0,
+                                 step=replica.engine.metrics.steps)
             try:
                 replica.engine.step()
             except Exception as exc:
+                if (classify_failure(exc) == TRANSIENT
+                        and self.retry is not None
+                        and attempts < self.retry.max_retries):
+                    attempts += 1
+                    self.counters["retries"] += 1
+                    self.sleep(self.retry.backoff(attempts))
+                    continue
                 self._quarantine(replica, exc)
-        return self._events
+                return
+            now = self.clock()
+            if (self.health is not None
+                    and replica.name in self.health.hung(now)):
+                self._quarantine(replica, ReplicaHungError(
+                    f"replica {replica.name!r} step took {now - t0:.3f}s, "
+                    f"over the {self.health_cfg.watchdog_s}s watchdog "
+                    f"deadline"))
+                return
+            if self.health is not None:
+                self.health.beat(replica.name, now,
+                                 step=replica.engine.metrics.steps)
+            durations[replica.name] = now - t0
+            return
 
     def _quarantine(self, replica: EngineReplica,
                     exc: BaseException) -> None:
         replica.healthy = False
         replica.fault = exc
         self.counters["replicas_quarantined"] += 1
+        if (self.health is not None and replica.factory is not None
+                and not replica.retired):
+            self.health.on_quarantine(replica.name, self.clock())
+        elif self.health is not None:
+            replica.retired = True    # nothing to restart: never probed
         stranded = [t for t in self.tickets.values()
                     if not t.done and t.replica is replica]
-        if not any(r.healthy for r in self.replicas):
+        survivors = any(r.healthy for r in self.replicas)
+        if not survivors and not self._may_recover():
             for ticket in stranded:
                 self._finalize(ticket, FAILED)
             raise RuntimeError(
@@ -326,11 +477,73 @@ class EngineRouter:
             ) from exc
         for ticket in stranded:
             self.counters["requests_requeued"] += 1
-            self._dispatch(ticket)
+            if survivors:
+                self._dispatch(ticket)
+            else:
+                ticket.replica = None
+                ticket.local_id = None
+                self._pending.append(ticket)
+
+    # ---------------- health probes / re-admission ----------------
+
+    def _probe_sweep(self, now: float) -> None:
+        """Run due health probes: canary a warm-restarted engine; N
+        consecutive passes re-admit the replica with it, ``max_probes``
+        consecutive failures retire the replica.  When retirement kills
+        the last possible recovery, parked requests resolve ``failed``."""
+        for name in self.health.due_probes(now):
+            replica = self._by_name[name]
+            if replica.healthy or replica.retired:
+                self.health.probes.pop(name, None)
+                continue
+            state = self.health.probes[name]
+            self.counters["probes"] += 1
+            if state.candidate is None:
+                try:
+                    state.candidate = replica.factory()
+                except Exception:
+                    state.candidate = None
+            ok = (state.candidate is not None
+                  and self._run_canary(state.candidate))
+            candidate = state.candidate
+            if not ok:
+                self.counters["probe_failures"] += 1
+            verdict = self.health.record_probe(name, ok, self.clock())
+            if verdict == "readmit":
+                self._readmit(replica, candidate)
+            elif verdict == "retired":
+                replica.retired = True
+        if (self._pending and not self._may_recover()
+                and not any(r.healthy for r in self.replicas)):
+            pending, self._pending = self._pending, []
+            for ticket in pending:
+                self._finalize(ticket, FAILED)
+
+    def _run_canary(self, engine: ContinuousEngine) -> bool:
+        """One greedy canary generate on the candidate engine (a single
+        request, occupying one slot of its pool)."""
+        cfg = self.health_cfg
+        try:
+            out = engine.serve([Request(prompt=list(cfg.canary_prompt),
+                                        max_tokens=cfg.canary_tokens,
+                                        stop_tokens=())])
+        except Exception:
+            return False
+        return all(len(toks) >= 1 for toks in out.values())
+
+    def _readmit(self, replica: EngineReplica,
+                 engine: ContinuousEngine) -> None:
+        replica.engine = engine        # the warm restart becomes live
+        replica.healthy = True
+        replica.fault = None
+        replica.restarts += 1
+        self.counters["replicas_readmitted"] += 1
+        self.health.on_readmit(replica.name, self.clock())
 
     def has_work(self) -> bool:
-        return any(r.healthy and r.engine.scheduler.has_work()
-                   for r in self.replicas)
+        return (any(r.healthy and r.engine.scheduler.has_work()
+                    for r in self.replicas)
+                or any(not t.done for t in self._pending))
 
     def serve(self, requests: Sequence[Request], *,
               tiers: Sequence[str | None] | None = None,
@@ -358,5 +571,8 @@ class EngineRouter:
                 "running": float(r.engine.scheduler.n_running),
                 "slots_free": float(r.engine.pool.n_free),
                 "healthy": 1.0 if r.healthy else 0.0,
+                "probing": 1.0 if (self.health is not None
+                                   and self.health.is_probing(r.name))
+                else 0.0,
             } for r in self.replicas},
             counters=dict(self.counters))

@@ -436,7 +436,18 @@ class ContinuousEngine:
         events = []
         while self.pool.n_free and self.scheduler.waiting:
             state = self.scheduler.next_waiting()
-            events.append(self._emit(*self._admit(state, self.pool.alloc())))
+            slot = self.pool.alloc()
+            try:
+                event = self._admit(state, slot)
+            except Exception:
+                # retry-safe admission: a failed prefill frees the slot
+                # and puts the request back first-in-line, so a router
+                # retrying this step neither loses nor duplicates it
+                self.scheduler.running.pop(slot, None)
+                self._release_slot(slot)
+                self.scheduler.requeue(state)
+                raise
+            events.append(self._emit(*event))
 
         active = sorted(self.scheduler.running.items())
         if active:

@@ -162,8 +162,23 @@ class AsyncFrontend:
         if self._task is None:
             raise RuntimeError("frontend is not started")
         handle = RequestHandle(self)
+        if self._stopping == "abort" or self._task.done():
+            # stop already landed: this submit will never be routed, so
+            # resolve its handle terminally instead of leaving the
+            # awaiter hanging on a command nobody will drain
+            self._resolve_unrouted(handle)
+            return handle
         await self._enqueue(("submit", handle, request, tier, deadline_s))
+        if self._task.done() and not handle.done():
+            # the loop exited between the check and the enqueue: the
+            # command is in a dead inbox — resolve the handle here
+            self._resolve_unrouted(handle)
         return handle
+
+    @staticmethod
+    def _resolve_unrouted(handle: RequestHandle) -> None:
+        handle._finish(RequestResult(status=_cluster.CANCELLED, tokens=[],
+                                     finish_reason=_cluster.CANCELLED))
 
     async def _enqueue(self, command: tuple) -> None:
         if self._inbox is None:
@@ -207,6 +222,13 @@ class AsyncFrontend:
             # through the normal on_finish bridge)
             for tid in list(self._handles):
                 self.router.cancel(tid)
+            # commands still in the inbox were never applied (stop or a
+            # cluster fault beat them): resolve their handles terminally
+            # so no submitter awaits a dead loop
+            while self._inbox is not None and not self._inbox.empty():
+                command = self._inbox.get_nowait()
+                if command[0] == "submit":
+                    self._resolve_unrouted(command[1])
 
     def _apply(self, command: tuple) -> None:
         op = command[0]

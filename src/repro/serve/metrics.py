@@ -124,6 +124,34 @@ _PROM_SPEC = (
 )
 
 
+# HELP text for the router-level families rendered via the generic
+# ``gauges=`` / ``counters=`` hooks of render_prometheus (families not
+# listed fall back to a generic line, so adding a counter in the router
+# never breaks the exposition).
+_GAUGE_HELP = {
+    "queue_depth": "Requests waiting on this replica.",
+    "running": "Requests currently decoding on this replica.",
+    "slots_free": "Free KV-cache slots on this replica.",
+    "healthy": "1 when the replica is serving traffic, 0 quarantined.",
+    "probing": "1 while the quarantined replica is under health probes.",
+}
+_COUNTER_HELP = {
+    "requests_rejected": "Requests rejected at a full backlog.",
+    "requests_shed": "Requests shed by priority at a full backlog.",
+    "requests_timeout": "Requests expired by their deadline.",
+    "requests_requeued": "Requests requeued off a quarantined replica.",
+    "requests_degraded":
+        "Tier-affinity requests served off-tier (tier had no healthy "
+        "replica).",
+    "retries": "Transient step failures retried in place with backoff.",
+    "replicas_quarantined": "Replica quarantine events.",
+    "replicas_readmitted":
+        "Replicas re-admitted after passing health probes.",
+    "probes": "Health probes run against quarantined replicas.",
+    "probe_failures": "Health probes that failed.",
+}
+
+
 def _prom_value(v) -> str:
     f = float(v)
     return repr(int(f)) if f == int(f) else repr(f)
@@ -155,14 +183,16 @@ def render_prometheus(rows, *, gauges=None, counters=None) -> str:
                 f"{name}{_prom_labels(labels)} {_prom_value(extract(m))}")
     for family in sorted(gauges or ()):
         name = PROM_PREFIX + family
-        lines.append(f"# HELP {name} Live gauge exported by the router.")
+        help_ = _GAUGE_HELP.get(family, "Live gauge exported by the router.")
+        lines.append(f"# HELP {name} {help_}")
         lines.append(f"# TYPE {name} gauge")
         for labels, value in gauges[family]:
             lines.append(f"{name}{_prom_labels(labels)} "
                          f"{_prom_value(value)}")
     for family in sorted(counters or ()):
         name = PROM_PREFIX + family + "_total"
-        lines.append(f"# HELP {name} Router-level counter.")
+        help_ = _COUNTER_HELP.get(family, "Router-level counter.")
+        lines.append(f"# HELP {name} {help_}")
         lines.append(f"# TYPE {name} counter")
         lines.append(f"{name} {_prom_value(counters[family])}")
     return "\n".join(lines) + "\n"

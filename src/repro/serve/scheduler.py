@@ -112,6 +112,18 @@ class Scheduler:
         self.waiting.remove(best)
         return best
 
+    def requeue(self, state: RequestState) -> None:
+        """Put an un-admitted state back at the head of the queue.
+
+        The engine's prefill-failure path: admission popped the state and
+        allocated a slot, prefill raised, the slot was freed — the state
+        goes back first-in-line so a retried step picks it up again
+        (retry-safe admission: no work is lost, none duplicated)."""
+        state.status = WAITING
+        state.slot = None
+        state.admit_step = None
+        self.waiting.appendleft(state)
+
     def start(self, state: RequestState, slot: int, step: int) -> None:
         state.status = RUNNING
         state.slot = slot

@@ -14,6 +14,15 @@ mid-service.  The smoke asserts the replica is quarantined, its in-flight
 requests requeue onto the survivor, and *every* submitted request still
 resolves ``completed`` through its awaitable handle — then prints the
 Prometheus exposition line count as a sanity check on metrics export.
+
+``python -m repro.serve.smoke --chaos`` drives the full self-healing
+loop under a seeded ``FaultInjector``: three replicas, transient faults
+(survived by in-place retry), one permanent fault and one hang (each
+quarantining its replica, which is then health-probed, warm-restarted,
+and re-admitted), all on an injectable clock.  The smoke asserts every
+request reaches a terminal status, at least one retry / two quarantines
+/ two re-admissions happened, and the greedy token streams are
+token-for-token identical to a fault-free reference run.
 """
 from __future__ import annotations
 
@@ -127,6 +136,102 @@ def _frontend_smoke(args) -> None:
         raise SystemExit("no requests were requeued off the failed replica")
 
 
+def _chaos_smoke(args) -> None:
+    import jax
+    import numpy as np
+
+    from repro import configs
+    from repro.models import api
+    from repro.serve import (ContinuousEngine, EngineReplica, EngineRouter,
+                             FaultClock, FaultInjector, FaultSpec,
+                             HealthConfig, PoolConfig, Request, RetryPolicy)
+
+    cfg = configs.get(args.arch).reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    pool = lambda: PoolConfig(n_slots=args.n_slots,  # noqa: E731
+                              max_len=args.max_len)
+    make_engine = lambda: ContinuousEngine(cfg, params, pool())  # noqa: E731
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(prompt=rng.integers(0, cfg.vocab, 3 + i % 7).tolist(),
+                max_tokens=3 + i % 3, stop_tokens=())
+        for i in range(args.requests)
+    ]
+    # greedy fault-free reference: with temperature=0 every token is a
+    # pure function of the prompt, so chaos-run streams must match it
+    reference = make_engine().serve(requests)
+    ref_tokens = [reference[i] for i in sorted(reference)]
+
+    clk = FaultClock()
+    injector = FaultInjector([
+        # transient blips on "flaky": survived by in-place retry
+        FaultSpec(site="step", target="flaky", at=2, kind="transient"),
+        FaultSpec(site="step", target="flaky", at=3, kind="transient"),
+        # permanent fault on "doomed": quarantine -> probe -> re-admit
+        FaultSpec(site="step", target="doomed", at=2, kind="fatal"),
+        # one hang on "flaky" right after the retries, past the
+        # watchdog deadline: quarantined too
+        FaultSpec(site="step", target="flaky", at=4, kind="hang",
+                  hang_s=10.0),
+    ], clock=clk)
+    replicas = [
+        EngineReplica("stable", make_engine(), factory=make_engine),
+        EngineReplica("flaky", injector.instrument(make_engine(), "flaky"),
+                      factory=make_engine),
+        EngineReplica("doomed", injector.instrument(make_engine(), "doomed"),
+                      factory=make_engine),
+    ]
+    router = EngineRouter(
+        replicas, clock=clk, sleep=clk.advance,
+        retry=RetryPolicy(max_retries=3, backoff_s=0.01, seed=0),
+        health=HealthConfig(probe_interval_s=1.0, probes_to_readmit=2,
+                            max_probes=8, watchdog_s=5.0))
+
+    out = router.serve(requests)
+    statuses = [router.tickets[tid].status for tid in sorted(out)]
+    # drive the probe loop until both quarantined replicas rejoin
+    for _ in range(64):
+        if all(r.healthy for r in replicas):
+            break
+        clk.advance(1.0)
+        router.step()
+    readmitted = router.counters["replicas_readmitted"]
+    # second wave lands on the healed cluster (including the rejoins)
+    out2 = router.serve(requests[:3])
+    statuses += [router.tickets[tid].status for tid in sorted(out2)]
+
+    chaos_tokens = [out[tid] for tid in sorted(out)]
+    parity = sum(1 for got, ref in zip(chaos_tokens, ref_tokens)
+                 if got == ref)
+    terminal = sum(1 for s in statuses if s is not None)
+    c = router.counters
+    print(f"chaos-smoke arch={args.arch} replicas=3 "
+          f"terminal={terminal}/{len(statuses)} "
+          f"parity={parity}/{len(requests)} "
+          f"retries={c['retries']} quarantined={c['replicas_quarantined']} "
+          f"readmitted={readmitted} probes={c['probes']} "
+          f"requeued={c['requests_requeued']} "
+          f"faults={len(injector.fired)}")
+    if terminal != len(statuses):
+        raise SystemExit("a request never reached a terminal status")
+    if parity != len(requests):
+        bad = [i for i, (g, r) in enumerate(zip(chaos_tokens, ref_tokens))
+               if g != r]
+        raise SystemExit(f"chaos streams diverged from the fault-free "
+                         f"reference at requests {bad}")
+    if c["retries"] < 1:
+        raise SystemExit("no transient fault was retried")
+    if c["replicas_quarantined"] < 2:
+        raise SystemExit("expected the fatal fault and the hang to "
+                         "quarantine a replica each")
+    if readmitted < 2:
+        raise SystemExit("quarantined replicas were not re-admitted")
+    if not all(r.healthy for r in replicas):
+        raise SystemExit("a replica is still unhealthy after the probe "
+                         "loop")
+
+
 def main(argv: Sequence[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="smollm-135m")
@@ -140,6 +245,12 @@ def main(argv: Sequence[str] | None = None) -> None:
     ap.add_argument("--frontend", action="store_true",
                     help="async front-end smoke: two replicas behind the "
                          "router, one injected fault, all must complete")
+    ap.add_argument("--chaos", action="store_true",
+                    help="self-healing smoke: seeded fault injector "
+                         "(transient, fatal, hang) against three replicas "
+                         "with retry + health probes; asserts retries, "
+                         "quarantine, re-admission, and token parity with "
+                         "a fault-free run")
     ap.add_argument("--fail-at-step", type=int, default=2,
                     help="with --frontend: replica step() call that raises")
     ap.add_argument("--candidates", type=int, default=None,
@@ -154,7 +265,9 @@ def main(argv: Sequence[str] | None = None) -> None:
     if args.repeats is not None:
         os.environ[autotune.ENV_REPEATS] = str(args.repeats)
 
-    if args.frontend:
+    if args.chaos:
+        _chaos_smoke(args)
+    elif args.frontend:
         _frontend_smoke(args)
     else:
         _continuous_smoke(args)
