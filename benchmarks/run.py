@@ -10,6 +10,8 @@ Prints ``name,us_per_call,derived`` CSV lines.  Mapping to the paper:
   tune_*   heuristic vs measured-autotune tiles (``--compare-policies``)
   serve_*  continuous-batching vs static-batching serving throughput
   quant_*  bf16 vs int8 quantized GEMM + int8-decode serving throughput
+  obs_*    roofline accounting (achieved GFLOP/s vs arithmetic
+           intensity per op) + traced autotune span counts
 
 ``--json out.json`` additionally persists every record (plus platform /
 dispatch metadata) so the BENCH_*.json perf trajectory can be diffed
@@ -52,11 +54,11 @@ def main() -> None:
     from benchmarks import (bench_attention, bench_autotune, bench_brgemm,
                             bench_conv_resnet50, bench_conv_strategies,
                             bench_distributed_proxy, bench_fc, bench_lstm,
-                            bench_quant, bench_serving, common)
+                            bench_obs, bench_quant, bench_serving, common)
 
     mods = [bench_brgemm, bench_conv_strategies, bench_lstm, bench_fc,
             bench_conv_resnet50, bench_attention, bench_distributed_proxy,
-            bench_serving, bench_quant]
+            bench_serving, bench_quant, bench_obs]
     if args.compare_policies:
         mods.append(bench_autotune)
     elif args.mesh:

@@ -8,7 +8,10 @@ interpret mode, quantization) scopes through the context API:
         ...  # every primitive in here routes to the XLA reference path
     with repro.use(quant="int8"):
         ...  # GEMMs run the int8 building block, dequant fused in-epilogue
+    with repro.use(tracer=obs.Tracer()):
+        ...  # spans + dispatch telemetry recorded for everything in here
 """
+from repro import obs  # noqa: F401
 from repro.core.blocking import (  # noqa: F401
     AttnBlocks,
     AttnBwdBlocks,
@@ -34,4 +37,6 @@ from repro.core.quantize import (  # noqa: F401
     quantize_weight,
 )
 
-__version__ = "1.5.0"
+from repro.obs import Tracer  # noqa: F401
+
+__version__ = "1.6.0"

@@ -25,7 +25,6 @@ zero on a warm persisted cache (this is what CI asserts).
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import functools
 import math
 import os
@@ -35,7 +34,9 @@ from typing import Callable, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import blocking, dispatch
+from repro.obs.telemetry import TELEMETRY
 
 ENV_MAX_CANDIDATES = "REPRO_AUTOTUNE_CANDIDATES"
 ENV_REPEATS = "REPRO_AUTOTUNE_REPEATS"
@@ -43,16 +44,28 @@ DEFAULT_MAX_CANDIDATES = 8
 DEFAULT_REPEATS = 3
 
 
-@dataclasses.dataclass
+def _stat(name: str) -> property:
+    return property(
+        lambda self: TELEMETRY.autotune[name],
+        lambda self, value: TELEMETRY.set_autotune(name, value))
+
+
 class SearchStats:
-    """Process-wide counters; lets tests and CI assert cache behavior."""
-    searches: int = 0
-    measured: int = 0
-    failed: int = 0
-    seeded: int = 0   # searches whose grid was seeded from a tuned neighbor
+    """Process-wide counters; lets tests and CI assert cache behavior.
+
+    A property proxy over the unified dispatch telemetry
+    (``repro.obs.telemetry.TELEMETRY.autotune``): the CLI's cache-hit
+    report, these attributes, and the Prometheus
+    ``repro_autotune_*_total`` families all read the same store, so
+    they can never drift apart.
+    """
+    searches = _stat("searches")
+    measured = _stat("measured")
+    failed = _stat("failed")
+    seeded = _stat("seeded")   # grids seeded from a tuned neighbor
 
     def snapshot(self) -> dict:
-        return dataclasses.asdict(self)
+        return dict(TELEMETRY.autotune)
 
 
 STATS = SearchStats()
@@ -264,16 +277,35 @@ def autotune_blocks(op: str, m: int, n: int, k: int, dtype, backend: str, *,
         candidates = candidates[:max(1, max_candidates)]
         STATS.seeded += 1
     STATS.searches += 1
+    tr = obs.current_tracer()
+    cost = obs.op_cost(op, m, n, k, dtype, geometry=geometry,
+                       quant=quant) if tr is not None else None
+    search_span = tr.span(
+        "autotune.search", op=op, m=int(m), n=int(n), k=int(k),
+        dtype=jnp.dtype(dtype).name, candidates=len(candidates),
+        seeded=seed is not None and seed in grid,
+    ) if tr is not None else obs.NULL_SPAN
     best, best_t = heuristic, float("inf")
-    for cand in candidates:
-        try:
-            t = timer(op, m, n, k, dtype, backend, cand)
-            STATS.measured += 1
-        except Exception:
-            STATS.failed += 1
-            continue
-        if t < best_t:
-            best, best_t = cand, t
+    with search_span:
+        for cand in candidates:
+            try:
+                if tr is not None:
+                    with tr.span("autotune.measure", op=op,
+                                 blocks=str(cand)) as sp:
+                        t = timer(op, m, n, k, dtype, backend, cand)
+                        sp.set(seconds=t, flops=cost.flops,
+                               gflops_per_s=round(cost.flops / t / 1e9, 3)
+                               if t > 0 else None)
+                else:
+                    t = timer(op, m, n, k, dtype, backend, cand)
+                STATS.measured += 1
+            except Exception:
+                STATS.failed += 1
+                continue
+            if t < best_t:
+                best, best_t = cand, t
+        search_span.set(best=str(best), best_seconds=best_t
+                        if best_t < float("inf") else None)
     return best
 
 

@@ -74,6 +74,8 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+import repro.obs as _obs
+from repro.obs import telemetry as _telemetry
 from repro.core.blocking import (
     BLOCK_SCHEMAS,
     Blocks,
@@ -198,7 +200,8 @@ class ExecutionContext:
     ``repro.sharding.local.local_problem``) or to dicts
     ``{"axes": triple, "backend": name}`` adding a per-op backend pin;
     ``quant`` is a ``repro.core.quantize.QuantConfig`` (or None for full
-    precision)."""
+    precision); ``tracer`` is a ``repro.obs.Tracer`` scoped to this
+    context (and the asyncio tasks it spawns)."""
     backend: str | None = None
     blocks_policy: str | Callable | None = None
     accum_dtype: Any = None
@@ -206,6 +209,7 @@ class ExecutionContext:
     mesh: Any = None
     axis_specs: Any = None
     quant: Any = None
+    tracer: Any = None
 
 
 _STACK: contextvars.ContextVar[tuple[ExecutionContext, ...]] = \
@@ -283,7 +287,7 @@ def _check_axis_spec(op: str, spec) -> None:
 def use(*, backend: str | None = None,
         blocks_policy: str | Callable | None = None,
         accum_dtype=None, interpret: bool | None = None,
-        mesh=None, axis_specs=None, quant=None):
+        mesh=None, axis_specs=None, quant=None, tracer=None):
     """Scope execution configuration: ``with repro.use(backend="xla"): ...``
 
     Only the fields passed are set; everything else inherits from the
@@ -298,7 +302,10 @@ def use(*, backend: str | None = None,
     overrides how the triple shards — innermost set mapping wins
     wholesale, it is not merged key-by-key.  ``quant`` switches the GEMM
     family to quantized execution (a ``QuantConfig``, dict, or shorthand
-    like ``"int8"``/``"fp8"``; see ``repro.core.quantize``).
+    like ``"int8"``/``"fp8"``; see ``repro.core.quantize``).  ``tracer``
+    (a ``repro.obs.Tracer``) scopes trace recording to this context —
+    dispatch resolutions, autotune measurements, and any ``obs.span``
+    entered inside it record there.
 
     Note: a jit-compiled function captures whatever the context resolves to
     at *trace* time; entering a different context later does not retrace
@@ -323,11 +330,15 @@ def use(*, backend: str | None = None,
         quant = as_quant_config(quant)
     ctx = ExecutionContext(backend=backend, blocks_policy=blocks_policy,
                            accum_dtype=accum_dtype, interpret=interpret,
-                           mesh=mesh, axis_specs=axis_specs, quant=quant)
+                           mesh=mesh, axis_specs=axis_specs, quant=quant,
+                           tracer=tracer)
     token = _STACK.set(_STACK.get() + (ctx,))
+    obs_token = _obs._activate(tracer) if tracer is not None else None
     try:
         yield ctx
     finally:
+        if obs_token is not None:
+            _obs._deactivate(obs_token)
         _STACK.reset(token)
 
 
@@ -335,7 +346,7 @@ def current_context() -> ExecutionContext:
     """The merged view of the active context stack (innermost wins)."""
     backend = _DEPRECATED_GLOBAL_BACKEND
     blocks_policy = accum_dtype = interpret = mesh = axis_specs = None
-    quant = None
+    quant = tracer = None
     for ctx in _STACK.get():
         backend = ctx.backend if ctx.backend is not None else backend
         blocks_policy = (ctx.blocks_policy if ctx.blocks_policy is not None
@@ -347,9 +358,11 @@ def current_context() -> ExecutionContext:
         axis_specs = (ctx.axis_specs if ctx.axis_specs is not None
                       else axis_specs)
         quant = ctx.quant if ctx.quant is not None else quant
+        tracer = ctx.tracer if ctx.tracer is not None else tracer
     return ExecutionContext(backend=backend, blocks_policy=blocks_policy,
                             accum_dtype=accum_dtype, interpret=interpret,
-                            mesh=mesh, axis_specs=axis_specs, quant=quant)
+                            mesh=mesh, axis_specs=axis_specs, quant=quant,
+                            tracer=tracer)
 
 
 # --------------------------------------------------------------------------
@@ -362,6 +375,22 @@ def _hardware_default() -> str:
 
 def _env_backend() -> str | None:
     return os.environ.get(ENV_VAR) or os.environ.get(LEGACY_ENV_VAR) or None
+
+
+def _record_dispatch(op: str, backend: str,
+                     fallback_from: str | None = None) -> None:
+    """Telemetry + tracing for one resolution: the always-on counters
+    behind ``repro_op_dispatch_total`` / ``repro_backend_fallbacks_total``,
+    plus an instant event when a tracer is active."""
+    _telemetry.TELEMETRY.record_dispatch(op, backend,
+                                         fallback_from=fallback_from)
+    tr = _obs.current_tracer()
+    if tr is not None:
+        if fallback_from is not None:
+            tr.event("dispatch", op=op, backend=backend,
+                     fallback_from=fallback_from)
+        else:
+            tr.event("dispatch", op=op, backend=backend)
 
 
 def resolve(op: str, backend: str | None = None) -> str:
@@ -382,6 +411,7 @@ def resolve(op: str, backend: str | None = None) -> str:
             f"unknown backend {name!r} for op {op!r}; registered backends: "
             f"{', '.join(sorted(impls))}")
     if impls[name].available():
+        _record_dispatch(op, name)
         return name
     if explicit:
         raise RuntimeError(
@@ -390,6 +420,7 @@ def resolve(op: str, backend: str | None = None) -> str:
             f"falling back; available: {', '.join(available_backends(op))})")
     for cand in sorted(impls.values(), key=lambda b: (-b.priority, b.name)):
         if cand.available():
+            _record_dispatch(op, cand.name, fallback_from=name)
             return cand.name
     raise RuntimeError(
         f"no available backend for op {op!r} on platform "
@@ -550,13 +581,17 @@ def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
     key = (op, backend, int(m), int(n), int(k), jnp.dtype(dtype).name,
            policy_key, geometry, mesh_sig, quant_tag)
     hit = _TUNING_CACHE.get(key)
-    if hit is None:
+    if hit is not None:
+        source = "cache-hit"
+    else:
         kwargs = {}
         if geometry is not None and _accepts_kwarg(policy_fn, "geometry"):
             kwargs["geometry"] = geometry
         if quant is not None and _accepts_kwarg(policy_fn, "quant"):
             kwargs["quant"] = quant
+        auto_before = dict(_telemetry.TELEMETRY.autotune)
         hit = policy_fn(op, m, n, k, dtype, backend, **kwargs)
+        source = _blocks_source(policy_key, auto_before)
         with _TUNING_LOCK:
             _TUNING_CACHE[key] = hit
         env_path = os.environ.get(TUNING_CACHE_ENV)
@@ -568,7 +603,56 @@ def resolve_blocks(op: str, m: int, n: int, k: int, dtype, *, backend: str,
                 # must not fail the resolve that produced the blocks
                 warnings.warn(f"could not write tuning cache to "
                               f"{env_path!r}: {exc}")
+    _telemetry.TELEMETRY.record_blocks(source)
+    tr = _obs.current_tracer()
+    if tr is not None:
+        _trace_blocks(tr, op, backend, m, n, k, dtype, geometry, mesh_sig,
+                      quant_tag, source, hit)
     return hit
+
+
+def _blocks_source(policy_key, auto_before: dict) -> str:
+    """Where a fresh blocks pick came from: the policy name, refined for
+    ``autotune`` by whether a measured search (or a neighbor seed)
+    actually ran — the autotuner returns the plain heuristic untouched
+    off the pallas path."""
+    if not isinstance(policy_key, str):
+        return "custom"
+    if policy_key == "autotune":
+        after = _telemetry.TELEMETRY.autotune
+        if after["seeded"] > auto_before["seeded"]:
+            return "autotune-seeded"
+        if after["searches"] > auto_before["searches"]:
+            return "autotune-measured"
+        return "heuristic"
+    return policy_key
+
+
+def _trace_blocks(tr, op, backend, m, n, k, dtype, geometry, mesh_sig,
+                  quant_tag, source, blocks) -> None:
+    """One ``resolve_blocks`` instant event carrying the full dispatch
+    decision (op, backend, shape, blocks source, quant, mesh) plus the
+    FLOP/byte cost of the problem, and a blocks-source annotation on the
+    enclosing span (if any)."""
+    from repro.obs import flops as _flops
+    ev = {"op": op, "backend": backend, "m": int(m), "n": int(n),
+          "k": int(k), "dtype": jnp.dtype(dtype).name, "source": source,
+          "blocks": str(blocks)}
+    if quant_tag is not None:
+        ev["quant"] = quant_tag
+    if mesh_sig is not None:
+        ev["mesh"] = str(mesh_sig)
+    try:
+        cost = _flops.op_cost(op, m, n, k, dtype, geometry=geometry,
+                              quant=quant_tag)
+    except ValueError:
+        cost = None
+    if cost is not None:
+        ev["flops"] = cost.flops
+        ev["bytes"] = cost.bytes
+        ev["intensity"] = round(cost.intensity, 3)
+    tr.event("resolve_blocks", **ev)
+    tr.annotate(**{f"blocks_source.{op}": source})
 
 
 def tuning_cache_info() -> dict[tuple, Any]:

@@ -1,7 +1,7 @@
 """Serving runtime: static reference engine, continuous batching, the
 multi-replica router, self-healing (fault classification, retry/backoff,
-health probes, re-admission, fault injection), and the asyncio
-front-end."""
+health probes, re-admission, fault injection), the asyncio front-end,
+and a stdlib HTTP shim over it."""
 from repro.serve.cluster import (  # noqa: F401
     ClusterRequest,
     EngineReplica,
@@ -35,9 +35,11 @@ from repro.serve.frontend import (  # noqa: F401
     RequestHandle,
     RequestResult,
 )
+from repro.serve.http import HttpFrontend, request_from_payload  # noqa: F401
 from repro.serve.kv_cache import SlotKVCache  # noqa: F401
 from repro.serve.metrics import (  # noqa: F401
     ClusterMetrics,
+    LatencyHistogram,
     ServeMetrics,
     render_prometheus,
 )

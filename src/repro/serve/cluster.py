@@ -63,6 +63,7 @@ import dataclasses
 import time
 from typing import Callable, Optional, Sequence
 
+from repro import obs
 from repro.serve.engine import ContinuousEngine
 from repro.serve.health import (
     ClusterHealth,
@@ -246,6 +247,8 @@ class EngineRouter:
             on_token=on_token, on_finish=on_finish, submit_time=now)
         self._next_ticket += 1
         self.tickets[ticket.ticket_id] = ticket
+        obs.event("router.submit", trace=f"t{ticket.ticket_id}",
+                  tier=tier, deadline_s=deadline_s)
         if (self.max_waiting is not None
                 and self.total_backlog >= self.max_waiting
                 and not self._make_room(ticket)):
@@ -294,6 +297,7 @@ class EngineRouter:
             if self._may_recover():
                 # cluster momentarily down: park until a probe re-admits
                 # a replica (deadline sweeps still cover parked tickets)
+                obs.event("router.park", trace=f"t{ticket.ticket_id}")
                 self._pending.append(ticket)
                 return
             self._finalize(ticket, FAILED)
@@ -305,12 +309,20 @@ class EngineRouter:
                 # instead of failing (or silently crossing tiers)
                 ticket.degraded = True
                 self.counters["requests_degraded"] += 1
+                obs.event("router.degrade", trace=f"t{ticket.ticket_id}",
+                          tier=ticket.tier)
             live = tiered or live
         replica = self.policy(live, ticket.request)
         ticket.attempts += 1
         ticket.replica = replica
+        # the ticket id is the cluster-wide trace id: the same request
+        # keeps it across requeues, so one trace follows it between
+        # replicas (each dispatch is a fresh local request id)
         ticket.local_id = replica.engine.submit(
-            ticket.request, on_token=self._bridge(ticket))
+            ticket.request, on_token=self._bridge(ticket),
+            trace=f"t{ticket.ticket_id}")
+        obs.event("router.dispatch", trace=f"t{ticket.ticket_id}",
+                  replica=replica.name, attempt=ticket.attempts)
 
     def _bridge(self, ticket: ClusterRequest) -> Callable:
         """Per-dispatch engine callback: forwards the replica's token
@@ -360,6 +372,10 @@ class EngineRouter:
         ticket.status = status
         if ticket.finish_reason is None:
             ticket.finish_reason = status
+        obs.event("request.finish", trace=f"t{ticket.ticket_id}",
+                  status=status, reason=ticket.finish_reason,
+                  tokens=len(ticket.tokens), attempts=ticket.attempts,
+                  ttft_s=ticket.ttft_s)
         if ticket.on_finish is not None:
             ticket.on_finish(ticket)
 
@@ -379,6 +395,7 @@ class EngineRouter:
             if (not ticket.done and ticket.deadline is not None
                     and now >= ticket.deadline):
                 self.counters["requests_timeout"] += 1
+                obs.event("router.timeout", trace=f"t{ticket.ticket_id}")
                 self._cancel_ticket(ticket, TIMEOUT)
         if self.health is not None:
             self._probe_sweep(now)
@@ -438,6 +455,8 @@ class EngineRouter:
                         and attempts < self.retry.max_retries):
                     attempts += 1
                     self.counters["retries"] += 1
+                    obs.event("router.retry", replica=replica.name,
+                              attempt=attempts, error=type(exc).__name__)
                     self.sleep(self.retry.backoff(attempts))
                     continue
                 self._quarantine(replica, exc)
@@ -461,6 +480,8 @@ class EngineRouter:
         replica.healthy = False
         replica.fault = exc
         self.counters["replicas_quarantined"] += 1
+        obs.event("replica.quarantine", replica=replica.name,
+                  error=type(exc).__name__)
         if (self.health is not None and replica.factory is not None
                 and not replica.retired):
             self.health.on_quarantine(replica.name, self.clock())
@@ -477,6 +498,8 @@ class EngineRouter:
             ) from exc
         for ticket in stranded:
             self.counters["requests_requeued"] += 1
+            obs.event("router.requeue", trace=f"t{ticket.ticket_id}",
+                      replica=replica.name)
             if survivors:
                 self._dispatch(ticket)
             else:
@@ -506,6 +529,7 @@ class EngineRouter:
             ok = (state.candidate is not None
                   and self._run_canary(state.candidate))
             candidate = state.candidate
+            obs.event("router.probe", replica=name, ok=ok)
             if not ok:
                 self.counters["probe_failures"] += 1
             verdict = self.health.record_probe(name, ok, self.clock())
@@ -538,6 +562,8 @@ class EngineRouter:
         replica.fault = None
         replica.restarts += 1
         self.counters["replicas_readmitted"] += 1
+        obs.event("replica.readmit", replica=replica.name,
+                  restarts=replica.restarts)
         self.health.on_readmit(replica.name, self.clock())
 
     def has_work(self) -> bool:

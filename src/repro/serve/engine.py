@@ -33,6 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.configs.base import ArchCfg
 from repro.core import dispatch
 from repro.models import api
@@ -231,7 +232,8 @@ class ContinuousEngine:
                  accum_dtype=None, interpret: bool | None = None,
                  mesh=None, axis_specs=None,
                  quant=None, decode_quant=None,
-                 priority_fn=None, key=None):
+                 priority_fn=None, key=None,
+                 clock: Callable[[], float] = time.perf_counter):
         if pool.prefill_bucket is not None and not _supports_bucketing(cfg):
             raise ValueError(
                 f"prefill_bucket is not supported for block={cfg.block!r} "
@@ -244,6 +246,10 @@ class ContinuousEngine:
                                 src_len=pool.src_len)
         self.scheduler = Scheduler(priority_fn=priority_fn)
         self.metrics = ServeMetrics()
+        # every lifecycle stamp (submit/admit/prefill-end/first-token)
+        # comes from this one clock, so TTFT breakdown segments telescope
+        # exactly; injectable for deterministic tests
+        self._clock = clock
         self._key = key if key is not None else jax.random.PRNGKey(0)
         self._pos_off = (cfg.n_patches or 0) if not api.is_encdec(cfg) else 0
         # Host-side per-slot sampling state, fed into the jit entries each
@@ -289,8 +295,8 @@ class ContinuousEngine:
     # ---------------- request lifecycle ----------------
 
     def submit(self, request: Request, *,
-               on_token: Callable[[int, int, bool], Any] | None = None
-               ) -> int:
+               on_token: Callable[[int, int, bool], Any] | None = None,
+               trace: str | None = None) -> int:
         """Queue a request; returns its id (see ``scheduler.finished``).
 
         ``on_token(request_id, token, finished)`` streams the request's
@@ -298,6 +304,10 @@ class ContinuousEngine:
         ``step()`` that generated the token and in generation order, and
         never again after the ``finished=True`` call.  Exceptions from the
         callback propagate out of ``step()``/``serve()``.
+
+        ``trace`` is an opaque trace id stamped onto the request's spans
+        and events (the router passes its ticket id, so one client request
+        is followable across retries/replicas); defaults to ``req<id>``.
         """
         n_prompt = len(request.prompt)
         if n_prompt < 1:
@@ -313,9 +323,15 @@ class ContinuousEngine:
                      if self.cfg.eos_token is not None else ())
         self.metrics.requests_submitted += 1
         rid = self.scheduler.submit(request, stop_tokens=tuple(stops),
-                                    step=self.metrics.steps)
+                                    step=self.metrics.steps,
+                                    now=self._clock(), trace=trace)
+        if trace is None:
+            self.scheduler.waiting[-1].trace = f"req{rid}"
         if on_token is not None:
             self._on_token[rid] = on_token
+        obs.event("engine.submit", request_id=rid,
+                  trace=self.scheduler.waiting[-1].trace,
+                  prompt_len=n_prompt, max_tokens=request.max_tokens)
         return rid
 
     def _emit(self, request_id: int, token: int, finished: bool):
@@ -354,11 +370,21 @@ class ContinuousEngine:
     def _admit(self, state: RequestState, slot: int):
         """Prefill + first token; returns the (id, token, finished) event."""
         req = state.request
+        state.admit_time = self._clock()
         batch, logit_pos = self._prompt_batch(req)
-        logits, rcache = self._prefill(self.params, batch,
-                                       self.pool.request_cache(),
-                                       jnp.int32(logit_pos))
-        self.pool.insert(slot, rcache)
+        tr = obs.current_tracer()
+        span = (tr.span("prefill", request_id=state.request_id,
+                        trace=state.trace, prompt_len=len(req.prompt),
+                        slot=slot)
+                if tr is not None else obs.NULL_SPAN)
+        with span:
+            logits, rcache = self._prefill(self.params, batch,
+                                           self.pool.request_cache(),
+                                           jnp.int32(logit_pos))
+            self.pool.insert(slot, rcache)
+        # prefill dispatch is async; the sample below syncs, so the
+        # first_decode segment includes waiting out the prefill tail
+        state.prefill_end_time = self._clock()
         self.metrics.prefills += 1
         self.scheduler.start(state, slot, self.metrics.steps)
 
@@ -374,10 +400,12 @@ class ContinuousEngine:
         self.metrics.ttft_steps_sum += self.metrics.steps - state.submit_step
         self.metrics.ttft_count += 1
         finished = self.scheduler.record_token(state, tok,
-                                               self.metrics.steps)
+                                               self.metrics.steps,
+                                               now=self._clock())
         # first token always lands at admission => wall-clock TTFT is known
         if state.ttft_s is not None:
             self.metrics.ttft_s_sum += state.ttft_s
+            self.metrics.ttft_hist.observe(state.ttft_s)
         if finished:
             self._evict(state)
             return state.request_id, tok, True
@@ -392,6 +420,38 @@ class ContinuousEngine:
     def _evict(self, state: RequestState) -> None:
         self._release_slot(state.slot)
         self.metrics.requests_completed += 1
+        tr = obs.current_tracer()
+        if tr is not None:
+            self._trace_request(tr, state)
+
+    def _trace_request(self, tracer, state: RequestState) -> None:
+        """Emit the request's lifecycle as synthetic spans at eviction.
+
+        A request lives across many ``step()`` calls, so its spans can't be
+        open context managers; instead the scheduler's lifecycle stamps are
+        replayed as one ``request`` span with ``request.queue`` /
+        ``request.prefill`` / ``request.first_decode`` children cut from
+        the same stamps as ``ttft_breakdown`` (they telescope exactly).
+        """
+        end = (state.finish_time if state.finish_time is not None
+               else self._clock())
+        root = tracer.add_span(
+            "request", state.submit_time, end,
+            request_id=state.request_id, trace=state.trace,
+            status=state.status, finish_reason=state.finish_reason,
+            tokens=len(state.generated), ttft_s=state.ttft_s)
+        bd = state.ttft_breakdown
+        if bd is None:
+            return
+        tracer.add_span("request.queue", state.submit_time,
+                        state.admit_time, parent_id=root.span_id,
+                        trace=state.trace)
+        tracer.add_span("request.prefill", state.admit_time,
+                        state.prefill_end_time, parent_id=root.span_id,
+                        trace=state.trace)
+        tracer.add_span("request.first_decode", state.prefill_end_time,
+                        state.first_token_time, parent_id=root.span_id,
+                        trace=state.trace)
 
     def _release_slot(self, slot: int) -> None:
         self.pool.free(slot)
@@ -425,7 +485,7 @@ class ContinuousEngine:
 
         Returns a list of ``(request_id, token, finished)`` events.
         """
-        t0 = time.perf_counter()
+        t0 = self._clock()
         self.metrics.steps += 1
         step = self.metrics.steps
         depth = self.scheduler.queue_depth
@@ -451,16 +511,26 @@ class ContinuousEngine:
 
         active = sorted(self.scheduler.running.items())
         if active:
-            logits, self.pool.cache = self._decode(
-                self.params, jnp.asarray(self._tokens)[:, None],
-                self.pool.cache, jnp.asarray(self.pool.positions))
-            if not np.any(self._temps > 0):
-                toks = np.asarray(self._greedy(logits))
-            else:
-                self._key, sub = jax.random.split(self._key)
-                toks = np.asarray(self._sample(
-                    logits, jnp.asarray(self._temps),
-                    jnp.asarray(self._topk), sub))
+            tr = obs.current_tracer()
+            dspan = (tr.span("decode", step=step, n_active=len(active))
+                     if tr is not None else obs.NULL_SPAN)
+            td0 = self._clock()
+            with dspan:
+                logits, self.pool.cache = self._decode(
+                    self.params, jnp.asarray(self._tokens)[:, None],
+                    self.pool.cache, jnp.asarray(self.pool.positions))
+                if not np.any(self._temps > 0):
+                    toks = np.asarray(self._greedy(logits))
+                else:
+                    self._key, sub = jax.random.split(self._key)
+                    toks = np.asarray(self._sample(
+                        logits, jnp.asarray(self._temps),
+                        jnp.asarray(self._topk), sub))
+            # np.asarray above syncs, so td1 - td0 is the real decode
+            # latency every active slot's token paid this step
+            td1 = self._clock()
+            self.metrics.token_latency_hist.observe(td1 - td0,
+                                                    n=len(active))
             self.metrics.decode_steps += 1
             self.metrics.slot_steps += len(active)
             self.metrics.slot_capacity_steps += self.pool.n_slots
@@ -469,13 +539,14 @@ class ContinuousEngine:
                 self.pool.lengths[slot] += 1
                 tok = int(toks[slot])
                 self.metrics.tokens_generated += 1
-                finished = self.scheduler.record_token(state, tok, step)
+                finished = self.scheduler.record_token(state, tok, step,
+                                                       now=td1)
                 events.append(self._emit(state.request_id, tok, finished))
                 if finished:
                     self._evict(state)
                 else:
                     self._tokens[slot] = tok
-        self.metrics.wall_time_s += time.perf_counter() - t0
+        self.metrics.wall_time_s += self._clock() - t0
         return events
 
     def serve(self, requests, *, key=None) -> dict[int, list[int]]:

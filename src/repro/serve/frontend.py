@@ -35,6 +35,7 @@ import asyncio
 import dataclasses
 from typing import Optional
 
+from repro import obs
 from repro.serve import cluster as _cluster
 from repro.serve.cluster import EngineRouter
 from repro.serve.scheduler import Request
@@ -201,8 +202,16 @@ class AsyncFrontend:
                     # idle: block until a client says something
                     self._apply(await self._inbox.get())
                     continue
-                await loop.run_in_executor(self._executor,
-                                           self.router.step)
+                # executor threads don't inherit the loop's contextvars,
+                # so a tracer scoped around the frontend (repro.use
+                # tracer=...) is re-activated around each step explicitly
+                tr = obs.current_tracer()
+                if tr is None:
+                    await loop.run_in_executor(self._executor,
+                                               self.router.step)
+                else:
+                    await loop.run_in_executor(self._executor,
+                                               self._traced_step, tr)
         except Exception as exc:
             # total cluster failure: resolve every pending handle so no
             # client awaits forever, then surface the fault on .error
@@ -229,6 +238,10 @@ class AsyncFrontend:
                 command = self._inbox.get_nowait()
                 if command[0] == "submit":
                     self._resolve_unrouted(command[1])
+
+    def _traced_step(self, tracer) -> None:
+        with obs.activate(tracer):
+            self.router.step()
 
     def _apply(self, command: tuple) -> None:
         op = command[0]

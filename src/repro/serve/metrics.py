@@ -14,10 +14,103 @@ router-level counters (rejected / shed / timeout / requeued);
 ``ClusterMetrics.merge`` folds any set of per-replica metrics into one
 cluster-wide ``ServeMetrics``, and ``to_prometheus()`` renders everything
 as one exposition with a ``replica`` label per sample.
+
+Latency distributions (TTFT, per-token decode latency) accumulate in
+bounded-bucket ``LatencyHistogram``s on the engine itself, so percentile
+estimates (p50/p99) come from the serving loop's own observations —
+``bench_serving`` and the Prometheus exposition read them instead of
+recomputing percentiles downstream.  The exposition also appends the
+process-wide dispatch telemetry families (``repro_op_dispatch_total``,
+``repro_backend_fallbacks_total``, ``repro_tuning_cache_*_total``,
+``repro_autotune_*_total``) from :mod:`repro.obs.telemetry`.
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
+
+from repro.obs import telemetry as _telemetry
+
+# log-spaced ~0.5ms .. 60s: TTFT and per-token latencies on anything from
+# an interpret-mode CPU test to a loaded production replica land inside
+DEFAULT_LATENCY_BOUNDS = (
+    0.0005, 0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1,
+    0.25, 0.5, 1.0, 2.5, 5.0, 10.0, 30.0, 60.0,
+)
+
+
+@dataclasses.dataclass
+class LatencyHistogram:
+    """Bounded-bucket latency histogram with quantile estimates.
+
+    ``counts[i]`` holds observations ``<= bounds[i]`` (exclusive of the
+    previous bound); the final slot is the +Inf overflow.  ``__add__``
+    merges two histograms of the same bounds — which is what lets
+    ``ClusterMetrics.merge`` fold per-replica histograms with the same
+    generic field-summing loop it uses for plain counters.
+    """
+    bounds: tuple = DEFAULT_LATENCY_BOUNDS
+    counts: list = None
+    total_s: float = 0.0
+    count: int = 0
+
+    def __post_init__(self):
+        if self.counts is None:
+            self.counts = [0] * (len(self.bounds) + 1)
+
+    def observe(self, value_s: float, n: int = 1) -> None:
+        self.counts[bisect.bisect_left(self.bounds, value_s)] += n
+        self.total_s += value_s * n
+        self.count += n
+
+    def mean(self) -> float:
+        return self.total_s / self.count if self.count else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Estimated ``q``-quantile (0..1): linear interpolation inside
+        the bucket holding the target rank; the overflow bucket reports
+        the last bound (a floor, not an estimate)."""
+        if not self.count:
+            return 0.0
+        target = q * self.count
+        seen = 0.0
+        for i, c in enumerate(self.counts):
+            if not c:
+                continue
+            if seen + c >= target:
+                if i >= len(self.bounds):
+                    return self.bounds[-1]
+                lo = self.bounds[i - 1] if i else 0.0
+                frac = (target - seen) / c
+                return lo + (self.bounds[i] - lo) * min(1.0, max(0.0, frac))
+            seen += c
+        return self.bounds[-1]
+
+    def __add__(self, other: "LatencyHistogram") -> "LatencyHistogram":
+        if self.bounds != other.bounds:
+            raise ValueError("cannot merge histograms with different "
+                             "bucket bounds")
+        return LatencyHistogram(
+            bounds=self.bounds,
+            counts=[a + b for a, b in zip(self.counts, other.counts)],
+            total_s=self.total_s + other.total_s,
+            count=self.count + other.count)
+
+    def prometheus_lines(self, name: str, labels: str) -> list[str]:
+        """The cumulative ``_bucket``/``_sum``/``_count`` samples of one
+        histogram (headers are the caller's job)."""
+        lines, cum = [], 0
+        for bound, c in zip(self.bounds, self.counts):
+            cum += c
+            sep = "," if labels else ""
+            inner = labels[1:-1] if labels else ""
+            lines.append(f'{name}_bucket{{{inner}{sep}le="{bound}"}} {cum}')
+        inner = labels[1:-1] if labels else ""
+        sep = "," if labels else ""
+        lines.append(f'{name}_bucket{{{inner}{sep}le="+Inf"}} {self.count}')
+        lines.append(f"{name}_sum{labels} {_prom_value(self.total_s)}")
+        lines.append(f"{name}_count{labels} {self.count}")
+        return lines
 
 
 @dataclasses.dataclass
@@ -41,6 +134,13 @@ class ServeMetrics:
     ttft_s_sum: float = 0.0
     ttft_count: int = 0
     wall_time_s: float = 0.0
+    # latency distributions, engine-observed: wall-clock TTFT per request
+    # and per-token decode-step latency (the batched decode's duration,
+    # one observation per active slot)
+    ttft_hist: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)
+    token_latency_hist: LatencyHistogram = dataclasses.field(
+        default_factory=LatencyHistogram)
 
     # ---------------- derived ----------------
 
@@ -72,6 +172,10 @@ class ServeMetrics:
         out["mean_queue_depth"] = self.mean_queue_depth()
         out["mean_ttft_steps"] = self.mean_ttft_steps()
         out["mean_ttft_s"] = self.mean_ttft_s()
+        out["ttft_p50_s"] = self.ttft_hist.quantile(0.5)
+        out["ttft_p99_s"] = self.ttft_hist.quantile(0.99)
+        out["token_latency_p50_s"] = self.token_latency_hist.quantile(0.5)
+        out["token_latency_p99_s"] = self.token_latency_hist.quantile(0.99)
         return out
 
     def to_prometheus(self, labels: dict | None = None) -> str:
@@ -121,6 +225,28 @@ _PROM_SPEC = (
     ("ttft_seconds_mean", "gauge",
      "Mean wall-clock time-to-first-token in seconds.",
      lambda m: m.mean_ttft_s()),
+    ("ttft_seconds_p50", "gauge",
+     "Engine-observed wall-clock TTFT p50 estimate (seconds).",
+     lambda m: m.ttft_hist.quantile(0.5)),
+    ("ttft_seconds_p99", "gauge",
+     "Engine-observed wall-clock TTFT p99 estimate (seconds).",
+     lambda m: m.ttft_hist.quantile(0.99)),
+    ("token_latency_seconds_p50", "gauge",
+     "Engine-observed per-token decode latency p50 estimate (seconds).",
+     lambda m: m.token_latency_hist.quantile(0.5)),
+    ("token_latency_seconds_p99", "gauge",
+     "Engine-observed per-token decode latency p99 estimate (seconds).",
+     lambda m: m.token_latency_hist.quantile(0.99)),
+)
+
+# (family suffix, help, histogram accessor): rendered as native
+# Prometheus histograms (_bucket{le=}/_sum/_count) per row
+_PROM_HISTOGRAMS = (
+    ("ttft_seconds", "Wall-clock time-to-first-token distribution.",
+     lambda m: m.ttft_hist),
+    ("token_latency_seconds",
+     "Per-token decode-step latency distribution.",
+     lambda m: m.token_latency_hist),
 )
 
 
@@ -165,13 +291,17 @@ def _prom_labels(labels: dict) -> str:
     return "{" + ",".join(f'{k}="{v}"' for k, v in esc.items()) + "}"
 
 
-def render_prometheus(rows, *, gauges=None, counters=None) -> str:
+def render_prometheus(rows, *, gauges=None, counters=None,
+                      dispatch_telemetry: bool = True) -> str:
     """Render ``rows`` of ``(labels, ServeMetrics)`` as one exposition.
 
     Each family gets its HELP/TYPE header once, then one sample per row.
     ``gauges`` adds extra per-row gauge families as
     ``{family: [(labels, value), ...]}``; ``counters`` adds unlabelled
     top-level counters as ``{family: value}`` (router-level totals).
+    ``dispatch_telemetry`` appends the process-wide dispatch/autotune
+    counter families from :mod:`repro.obs.telemetry` (they are
+    per-process, not per-replica, so they render once, unlabelled).
     """
     lines = []
     for suffix, ptype, help_, extract in _PROM_SPEC:
@@ -181,6 +311,13 @@ def render_prometheus(rows, *, gauges=None, counters=None) -> str:
         for labels, m in rows:
             lines.append(
                 f"{name}{_prom_labels(labels)} {_prom_value(extract(m))}")
+    for suffix, help_, extract in _PROM_HISTOGRAMS:
+        name = PROM_PREFIX + suffix
+        lines.append(f"# HELP {name} {help_}")
+        lines.append(f"# TYPE {name} histogram")
+        for labels, m in rows:
+            lines.extend(extract(m).prometheus_lines(
+                name, _prom_labels(labels)))
     for family in sorted(gauges or ()):
         name = PROM_PREFIX + family
         help_ = _GAUGE_HELP.get(family, "Live gauge exported by the router.")
@@ -195,6 +332,8 @@ def render_prometheus(rows, *, gauges=None, counters=None) -> str:
         lines.append(f"# HELP {name} {help_}")
         lines.append(f"# TYPE {name} counter")
         lines.append(f"{name} {_prom_value(counters[family])}")
+    if dispatch_telemetry:
+        lines.extend(_telemetry.prometheus_lines())
     return "\n".join(lines) + "\n"
 
 

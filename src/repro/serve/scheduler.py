@@ -61,6 +61,13 @@ class RequestState:
     finish_reason: Optional[str] = None   # "stop" | "length" | "cancelled"
     submit_time: float = 0.0              # wall clock (time.perf_counter)
     first_token_time: Optional[float] = None
+    # TTFT breakdown stamps (engine clock, same domain as submit_time):
+    # admission start and prefill completion split TTFT into queue wait /
+    # prefill / first-decode segments that telescope exactly
+    admit_time: Optional[float] = None
+    prefill_end_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    trace: Optional[str] = None           # trace id (obs), None untraced
 
     @property
     def ttft_s(self) -> Optional[float]:
@@ -68,6 +75,26 @@ class RequestState:
         if self.first_token_time is None:
             return None
         return self.first_token_time - self.submit_time
+
+    @property
+    def ttft_breakdown(self) -> Optional[dict]:
+        """Where TTFT went: ``{"queue_s", "prefill_s", "first_decode_s"}``.
+
+        The three segments are cut from contiguous stamps on one clock
+        (submit -> admit -> prefill end -> first token), so they sum to
+        ``ttft_s`` exactly.  None until the first token (or when the
+        engine never stamped the admission, e.g. states finished by
+        ``cancel`` while waiting).
+        """
+        if (self.first_token_time is None or self.admit_time is None
+                or self.prefill_end_time is None):
+            return None
+        return {
+            "queue_s": self.admit_time - self.submit_time,
+            "prefill_s": self.prefill_end_time - self.admit_time,
+            "first_decode_s": self.first_token_time
+            - self.prefill_end_time,
+        }
 
 
 class Scheduler:
@@ -90,12 +117,15 @@ class Scheduler:
     # ---------------- submission / admission ----------------
 
     def submit(self, request: Request, *, stop_tokens: tuple = (),
-               step: int = 0, now: float | None = None) -> int:
+               step: int = 0, now: float | None = None,
+               trace: str | None = None) -> int:
         """Queue a request; returns its id.  ``stop_tokens`` is the
-        engine-resolved stop set (request override already applied)."""
+        engine-resolved stop set (request override already applied);
+        ``trace`` is an opaque trace id threaded onto the request's
+        spans (router ticket ids propagate here)."""
         state = RequestState(request=request, request_id=self._next_id,
                              stop_tokens=tuple(stop_tokens),
-                             submit_step=step,
+                             submit_step=step, trace=trace,
                              submit_time=(time.perf_counter()
                                           if now is None else now))
         self._next_id += 1
@@ -122,6 +152,8 @@ class Scheduler:
         state.status = WAITING
         state.slot = None
         state.admit_step = None
+        state.admit_time = None
+        state.prefill_end_time = None
         self.waiting.appendleft(state)
 
     def start(self, state: RequestState, slot: int, step: int) -> None:
@@ -148,13 +180,15 @@ class Scheduler:
             reason = "length"
         if reason is None:
             return False
-        self._finish(state, reason, step)
+        self._finish(state, reason, step, now=now)
         return True
 
-    def _finish(self, state: RequestState, reason: str, step: int) -> None:
+    def _finish(self, state: RequestState, reason: str, step: int,
+                now: float | None = None) -> None:
         state.status = FINISHED
         state.finish_reason = reason
         state.finish_step = step
+        state.finish_time = time.perf_counter() if now is None else now
         if state.slot is not None:
             self.running.pop(state.slot, None)
         self.finished[state.request_id] = state

@@ -23,6 +23,12 @@ and re-admitted), all on an injectable clock.  The smoke asserts every
 request reaches a terminal status, at least one retry / two quarantines
 / two re-admissions happened, and the greedy token streams are
 token-for-token identical to a fault-free reference run.
+
+``python -m repro.serve.smoke --trace`` serves under an installed
+``repro.obs.Tracer``: asserts prefill/decode/request spans were
+recorded, that every request's TTFT breakdown (queue/prefill/first
+decode) sums exactly to its wall-clock TTFT, and that the exported
+Chrome trace JSON round-trips ``obs.chrome.validate``.
 """
 from __future__ import annotations
 
@@ -232,6 +238,68 @@ def _chaos_smoke(args) -> None:
                          "loop")
 
 
+def _trace_smoke(args) -> None:
+    import jax
+    import numpy as np
+
+    from repro import configs, obs
+    from repro.models import api
+    from repro.serve import ContinuousEngine, PoolConfig, Request
+
+    cfg = configs.get(args.arch).reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ContinuousEngine(
+        cfg, params, PoolConfig(n_slots=args.n_slots, max_len=args.max_len))
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(prompt=rng.integers(0, cfg.vocab, 3 + i % 7).tolist(),
+                max_tokens=2 + i % 3, stop_tokens=())
+        for i in range(args.requests)
+    ]
+    tracer = obs.Tracer()
+    prev = obs.install(tracer)
+    try:
+        out = engine.serve(requests)
+    finally:
+        obs.install(prev)
+
+    completed = sum(1 for toks in out.values() if toks)
+    names = {r.name for r in tracer.spans()}
+    for needed in ("prefill", "decode", "request", "request.queue",
+                   "request.prefill", "request.first_decode"):
+        if needed not in names:
+            raise SystemExit(f"no {needed!r} span was recorded "
+                             f"(got {sorted(names)})")
+    # the TTFT breakdown must telescope: its segments are cut from
+    # contiguous stamps on one clock, so they sum to ttft_s exactly
+    checked = 0
+    for state in engine.scheduler.finished.values():
+        bd = state.ttft_breakdown
+        if bd is None or state.ttft_s is None:
+            raise SystemExit(
+                f"request {state.request_id} has no TTFT breakdown")
+        if abs(sum(bd.values()) - state.ttft_s) > 1e-6:
+            raise SystemExit(
+                f"request {state.request_id} breakdown {bd} does not sum "
+                f"to ttft_s={state.ttft_s}")
+        checked += 1
+
+    n_events = obs.export_chrome(tracer, args.trace_out)
+    trace = obs.chrome.load(args.trace_out)
+    obs.chrome.validate(trace)
+    chrome_names = {ev["name"] for ev in trace["traceEvents"]}
+    if "request" not in chrome_names or "decode" not in chrome_names:
+        raise SystemExit(f"chrome export lost spans: {sorted(chrome_names)}")
+
+    print(f"trace-smoke arch={args.arch} "
+          f"completed={completed}/{len(requests)} "
+          f"spans={len(tracer.spans())} chrome_events={n_events} "
+          f"breakdown=ok({checked}) trace={args.trace_out}")
+    if completed != len(requests):
+        raise SystemExit(f"only {completed}/{len(requests)} completed")
+
+
 def main(argv: Sequence[str] | None = None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="smollm-135m")
@@ -251,6 +319,13 @@ def main(argv: Sequence[str] | None = None) -> None:
                          "with retry + health probes; asserts retries, "
                          "quarantine, re-admission, and token parity with "
                          "a fault-free run")
+    ap.add_argument("--trace", action="store_true",
+                    help="tracing smoke: serve under an installed tracer, "
+                         "assert prefill/decode/request spans and an "
+                         "exactly-telescoping TTFT breakdown, export + "
+                         "validate a Chrome trace JSON")
+    ap.add_argument("--trace-out", default="trace_smoke.json",
+                    help="with --trace: Chrome trace output path")
     ap.add_argument("--fail-at-step", type=int, default=2,
                     help="with --frontend: replica step() call that raises")
     ap.add_argument("--candidates", type=int, default=None,
@@ -269,6 +344,8 @@ def main(argv: Sequence[str] | None = None) -> None:
         _chaos_smoke(args)
     elif args.frontend:
         _frontend_smoke(args)
+    elif args.trace:
+        _trace_smoke(args)
     else:
         _continuous_smoke(args)
 

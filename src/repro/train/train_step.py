@@ -13,6 +13,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs.base import ArchCfg
 from repro.core import dispatch
 from repro.models import api
@@ -54,10 +55,16 @@ def make_train_step(cfg: ArchCfg, ocfg: opt.AdamWCfg, *,
         # kernels, traced when value_and_grad pulls back cotangents)
         # resolve their block geometry under the same tuned context.
         step_mesh = mesh if mesh is not None else annotate.current_mesh()
-        with dispatch.use(backend=backend, blocks_policy=blocks_policy,
-                          accum_dtype=accum_dtype, mesh=step_mesh,
-                          axis_specs=axis_specs):
-            return _train_step(state, batch)
+        # The span brackets the python-side step: per-call when run
+        # eagerly, the (expensive, once) trace when the caller jits —
+        # either way the dispatch/autotune events it contains show which
+        # kernels this step resolved and how.
+        with obs.span("train_step", microbatches=microbatches,
+                      compression=grad_compression):
+            with dispatch.use(backend=backend, blocks_policy=blocks_policy,
+                              accum_dtype=accum_dtype, mesh=step_mesh,
+                              axis_specs=axis_specs):
+                return _train_step(state, batch)
 
     def _train_step(state, batch):
         params = opt.cast_params(state["opt"], cfg.dtype)
