@@ -39,4 +39,4 @@ from repro.core.quantize import (  # noqa: F401
 
 from repro.obs import Tracer  # noqa: F401
 
-__version__ = "1.6.0"
+__version__ = "1.7.0"

@@ -154,6 +154,24 @@ class ConvGeometry:
         return {"kind": self.kind, **dataclasses.asdict(self)}
 
 
+@dataclasses.dataclass(frozen=True)
+class PagedAttnGeometry:
+    """Paged-KV attention geometry: the kv stream is a gather over
+    ``pages`` fixed-size pages of ``page_size`` positions, so a kv block
+    that straddles a page boundary touches two non-contiguous source
+    pages.  Threading this through ``resolve_blocks`` clamps ``block_k``
+    to the page size (when a page is at least one lane tile) so every
+    online-softmax step reads within one page, and keys the tuning cache
+    on the page shape — the same (tq, tk, d) tunes separately for a paged
+    serving tier and a contiguous one."""
+    kind = "paged_attn"  # JSON tag (class attribute, not a field)
+    page_size: int
+    pages: int
+
+    def asdict(self):
+        return {"kind": self.kind, **dataclasses.asdict(self)}
+
+
 def geometry_from_dict(d: dict | None):
     """Inverse of a geometry tuple's ``asdict`` (None passes through)."""
     if d is None:
@@ -176,14 +194,24 @@ def choose_conv_blocks(
     return ConvBlocks(bq=bq, bc=bc, bk=bk)
 
 
+def _page_clamp(block_k: int, geometry) -> int:
+    """Largest lane-aligned block_k that stays within one KV page (no-op
+    for sub-lane pages, where boundary crossings are unavoidable)."""
+    if geometry is None or geometry.page_size < LANE:
+        return block_k
+    return min(block_k, geometry.page_size // LANE * LANE)
+
+
 def choose_attention_blocks(
-    tq: int, tk: int, d: int, dtype=jnp.float32
+    tq: int, tk: int, d: int, dtype=jnp.float32, *, geometry=None
 ) -> AttnBlocks:
     """Static heuristic for flash attention: (tq, tk, d) = (query len,
-    kv len, head dim)."""
+    kv len, head dim).  With a ``PagedAttnGeometry``, block_k is clamped
+    so no kv block straddles a page boundary."""
     del d
     return AttnBlocks(block_q=min(round_up(tq, 8), 128),
-                      block_k=min(round_up(tk, LANE), LANE))
+                      block_k=_page_clamp(min(round_up(tk, LANE), LANE),
+                                          geometry))
 
 
 def choose_attention_bwd_blocks(
@@ -273,6 +301,7 @@ def conv_candidates(
 def attention_candidates(
     tq: int, tk: int, d: int, dtype=jnp.float32, *,
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    geometry: PagedAttnGeometry | None = None,
 ) -> list[AttnBlocks]:
     itemsize = jnp.dtype(dtype).itemsize
     dp = round_up(d, LANE)
@@ -282,15 +311,22 @@ def attention_candidates(
         acc = bq * dp * 4 + 2 * bq * LANE * 4            # acc + (m, l)
         return panels + acc + bq * bk * 4                # + scores block
 
+    def in_page(bk):
+        # paged KV: only kv blocks that evenly tile a page (boundary
+        # crossings would gather from two non-contiguous pages)
+        if geometry is None or geometry.page_size < LANE:
+            return True
+        return bk <= geometry.page_size and geometry.page_size % bk == 0
+
     bqs = [b for b in _steps(8, 256) if b <= round_up(tq, 8) or b == 8]
     bks = [b for b in _steps(LANE, 512)
-           if b <= round_up(tk, LANE) or b == LANE]
+           if (b <= round_up(tk, LANE) or b == LANE) and in_page(b)]
     cands = [
         AttnBlocks(bq, bk)
         for bq in bqs for bk in bks
         if working_set(bq, bk) <= vmem_budget
     ]
-    heur = choose_attention_blocks(tq, tk, d, dtype)
+    heur = choose_attention_blocks(tq, tk, d, dtype, geometry=geometry)
     if heur not in cands:
         cands.append(heur)
     return sorted(cands, key=lambda b: b.astuple())
@@ -357,7 +393,8 @@ BLOCK_SCHEMAS: dict[str, BlockSchema] = {
         geometry_cls=ConvGeometry),
     "flash_attention": BlockSchema(
         kind="attn", cls=AttnBlocks, dims=("tq", "tk", "d"),
-        heuristic=choose_attention_blocks, candidates=attention_candidates),
+        heuristic=choose_attention_blocks, candidates=attention_candidates,
+        geometry_cls=PagedAttnGeometry),
     "flash_attention_bwd": BlockSchema(
         kind="attn_bwd", cls=AttnBwdBlocks, dims=("tq", "tk", "d"),
         heuristic=choose_attention_bwd_blocks,

@@ -4,12 +4,17 @@ All projections route through the batch-reduce GEMM building block; the
 attention inner loop uses the flash kernel (itself a batch-reduce GEMM with
 online-softmax epilogue) on the Pallas backend, or the jnp oracle on XLA.
 
-Three modes:
-  * train    — full causal sequence, no cache,
-  * prefill  — train-compute + returns the KV cache,
-  * decode   — one token against a (padded) cache; GQA caches (k, v), MLA
-    caches the *compressed* (c_kv, k_rope) and uses the absorbed-matmul
-    formulation (the memory win that motivates MLA).
+Four modes:
+  * train         — full causal sequence, no cache,
+  * prefill       — train-compute + returns the KV cache,
+  * prefill_chunk — one chunk of a longer prompt: queries live at absolute
+    positions ``pos .. pos+T-1``, attend causally to everything already in
+    the cache (``q_offset``), and append their KV at ``pos``.  Chaining
+    chunks reproduces one-shot prefill exactly (the causal mask zeroes the
+    not-yet-written tail bit-for-bit: ``exp(-1e30 - max) == 0``).
+  * decode        — one token against a (padded) cache; GQA caches (k, v),
+    MLA caches the *compressed* (c_kv, k_rope) and uses the
+    absorbed-matmul formulation (the memory win that motivates MLA).
 """
 from __future__ import annotations
 
@@ -142,6 +147,28 @@ def _gqa_prefill(params, x, cfg, cache, backend):
     return y, cache
 
 
+def _gqa_prefill_chunk(params, x, cfg, cache, pos, backend):
+    """One prompt chunk at absolute positions ``pos .. pos+T-1``.
+
+    The chunk's queries see the whole cache causally (earlier chunks plus
+    this one); its K/V land at ``pos``.  Runs on the masked reference
+    attention — the fused kernel has no ``q_offset`` — which is exact, not
+    approximate, so chunked == one-shot prefill holds bit-for-bit on the
+    reference path.
+    """
+    positions = pos + jnp.arange(x.shape[1])
+    q, k, v = _gqa_qkv(params, x, cfg, positions, backend)
+    cache = dict(cache)
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], k.astype(cache["k"].dtype), (0, 0, pos, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], v.astype(cache["v"].dtype), (0, 0, pos, 0))
+    o = mha_ref(q, cache["k"], cache["v"], causal=True, window=cfg.window,
+                q_offset=pos, kv_len=pos + x.shape[1])
+    y = brgemm.matmul(_merge_heads(o), params["wo"], backend=backend)
+    return y, cache
+
+
 def _gqa_decode(params, x, cfg, cache, pos, backend):
     positions = jnp.full((x.shape[1],), pos)
     q, k, v = _gqa_qkv(params, x, cfg, positions, backend)
@@ -242,6 +269,47 @@ def _mla_decode(params, x, cfg, cache, pos, backend):
     return y, cache
 
 
+def _mla_prefill_chunk(params, x, cfg, cache, pos, backend):
+    """One prompt chunk through the absorbed-matmul path.
+
+    Same cache layout and score math as ``_mla_decode``, generalized to
+    ``Tq > 1`` queries at absolute positions ``pos .. pos+T-1`` with a
+    causal mask against the compressed cache (earlier chunks + this one).
+    """
+    b, t, _ = x.shape
+    positions = pos + jnp.arange(t)
+    q_nope, q_rope = _mla_q(params, x, cfg, positions, backend)
+    c_kv_new, k_rope_new = _mla_compressed_kv(params, x, cfg, positions,
+                                              backend)
+    cache = dict(cache)
+    cache["c_kv"] = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_kv_new.astype(cache["c_kv"].dtype), (0, pos, 0))
+    cache["k_rope"] = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype),
+        (0, pos, 0))
+
+    wkv_b = params["wkv_b"].reshape(
+        cfg.kv_lora_rank, cfg.n_heads, cfg.qk_nope_dim + cfg.v_head_dim)
+    w_uk = wkv_b[..., :cfg.qk_nope_dim]
+    w_uv = wkv_b[..., cfg.qk_nope_dim:]
+
+    q_eff = jnp.einsum("bhqn,lhn->bhql", q_nope, w_uk)
+    s = (jnp.einsum("bhql,bsl->bhqs", q_eff, cache["c_kv"],
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhqr,bsr->bhqs", q_rope, cache["k_rope"],
+                      preferred_element_type=jnp.float32))
+    s = s * (cfg.qk_nope_dim + cfg.qk_rope_dim) ** -0.5
+    q_pos = pos + jnp.arange(t)[:, None]                      # (Tq, 1)
+    s_pos = jnp.arange(cache["c_kv"].shape[1])[None, :]       # (1, S)
+    mask = s_pos <= q_pos                                     # causal
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    o_c = jnp.einsum("bhqs,bsl->bhql", p, cache["c_kv"])
+    o = jnp.einsum("bhql,lhv->bhqv", o_c, w_uv)
+    y = brgemm.matmul(_merge_heads(o), params["wo"], backend=backend)
+    return y, cache
+
+
 # --------------------------------------------------------------------------
 # public API
 # --------------------------------------------------------------------------
@@ -262,6 +330,8 @@ def apply(params, x, cfg: AttnCfg, *, mode: str = "train", cache=None,
                 cache["k_rope"], k_rope.astype(cache["k_rope"].dtype),
                 (0, 0, 0))
             return y, cache
+        if mode == "prefill_chunk":
+            return _mla_prefill_chunk(params, x, cfg, cache, pos, backend)
         if mode == "decode":
             return _mla_decode(params, x, cfg, cache, pos, backend)
         raise ValueError(mode)
@@ -269,6 +339,8 @@ def apply(params, x, cfg: AttnCfg, *, mode: str = "train", cache=None,
         return _gqa_train(params, x, cfg, backend)
     if mode == "prefill":
         return _gqa_prefill(params, x, cfg, cache, backend)
+    if mode == "prefill_chunk":
+        return _gqa_prefill_chunk(params, x, cfg, cache, pos, backend)
     if mode == "decode":
         return _gqa_decode(params, x, cfg, cache, pos, backend)
     raise ValueError(mode)

@@ -47,6 +47,21 @@ def decode_step(params, tokens, cfg: ArchCfg, cache, pos, **kw):
     return get_module(cfg).decode_step(params, tokens, cfg, cache, pos, **kw)
 
 
+def prefill_chunk(params, batch, cfg: ArchCfg, cache, pos, *, length=None,
+                  first_chunk: bool = True, **kw):
+    """One chunk of a longer prompt against a batch-1 cache view.
+
+    ``first_chunk`` is only meaningful for enc-dec (runs the encoder and
+    caches cross-KV); decoder-only models ignore it.
+    """
+    if is_encdec(cfg):
+        return encdec.prefill_chunk(params, batch, cfg, cache, pos,
+                                    length=length, first_chunk=first_chunk,
+                                    **kw)
+    return transformer.prefill_chunk(params, batch, cfg, cache, pos,
+                                     length=length, **kw)
+
+
 # --------------------------------------------------------------------------
 # slot-indexed decode (continuous batching)
 # --------------------------------------------------------------------------
@@ -109,6 +124,165 @@ def decode_step_slots(params, tokens, cfg: ArchCfg, cache, positions, *,
 
     return jax.vmap(one, in_axes=(0, batch_axes, 0),
                     out_axes=(0, batch_axes))(tokens, cache, positions)
+
+
+# --------------------------------------------------------------------------
+# paged decode (page-gather as batch-reduce over page lists)
+# --------------------------------------------------------------------------
+
+def supports_paging(cfg: ArchCfg) -> bool:
+    """Whether the serve cache can be paged for this architecture.
+
+    Paging needs every growing cache leaf to be a position-indexed KV
+    tensor whose reads are masked by ``kv_len`` — true for full-attention
+    decoders (dense/moe/mla_moe) and the enc-dec decoder.  Sliding-window
+    ring buffers index ``pos % window`` (a page holds no stable position
+    range) and recurrent states have no time axis at all, so those
+    families stay on the slotted pool.
+    """
+    return (cfg.block in ("dense", "moe", "mla_moe", "encdec")
+            and not cfg.window and not cfg.n_patches)
+
+
+def cache_time_axes(cfg: ArchCfg, src_len: int = 0):
+    """Per-leaf *time*-axis tree for the serve cache (-1 = not pageable).
+
+    Discovered structurally, like :func:`cache_batch_axes`: diff the
+    abstract shapes of two caches built at different ``max_len`` — the
+    single axis whose extent changed with ``max_len`` is the time axis.
+    Leaves whose shape does not depend on ``max_len`` (recurrent states,
+    ring buffers, enc-dec cross-KV at fixed ``src_len``) get ``-1``: they
+    stay slot-resident under paging.
+    """
+    a = jax.eval_shape(lambda: init_cache(cfg, 1, 16, src_len))
+    b = jax.eval_shape(lambda: init_cache(cfg, 1, 32, src_len))
+
+    def axis(x, y):
+        diffs = [i for i, (m, n) in enumerate(zip(x.shape, y.shape))
+                 if m != n]
+        if not diffs:
+            return -1
+        if len(diffs) != 1:
+            raise ValueError(
+                f"ambiguous time axis for cache leaf {x.shape}: {diffs}")
+        return diffs[0]
+
+    return jax.tree.map(axis, a, b)
+
+
+def pages_to_view(pages, a: int, t: int):
+    """(P pages at axis ``a``, page_size at axis ``t``) -> contiguous
+    batch-1 cache view with ``P * page_size`` at the time axis."""
+    x = jnp.moveaxis(pages, a, t - 1)
+    shape = x.shape[:t - 1] + (x.shape[t - 1] * x.shape[t],) + x.shape[t + 1:]
+    return jnp.expand_dims(x.reshape(shape), a)
+
+
+def view_to_pages(view, a: int, t: int, page_size: int):
+    """Inverse of :func:`pages_to_view`."""
+    x = jnp.squeeze(view, a)
+    shape = (x.shape[:t - 1] + (x.shape[t - 1] // page_size, page_size)
+             + x.shape[t:])
+    return jnp.moveaxis(x.reshape(shape), t - 1, a)
+
+
+def _dequant_pages(pages, scale, a: int, dtype):
+    """int8 pages * per-page scale (broadcast from axis ``a``) -> dtype."""
+    shape = [1] * pages.ndim
+    shape[a] = pages.shape[a]
+    return (pages.astype(jnp.float32) * scale.reshape(shape)).astype(dtype)
+
+
+def _quant_pages(pages, a: int):
+    """Per-page absmax int8: returns (q, (n_pages_axis,) fp32 scales)."""
+    from repro.core.quantize import quantize
+    axes = tuple(i for i in range(pages.ndim) if i != a)
+    return quantize(pages, "int8", axis=axes)
+
+
+def decode_step_paged(params, tokens, cfg: ArchCfg, data, page_tables,
+                      positions, *, batch_axes, time_axes, page_size,
+                      scales=None, view_dtypes=None, **kw):
+    """One decode step over a paged pool: gather page lists, batch-reduce.
+
+    ``data``: the pool pytree — pageable leaves hold ``n_pages`` pages at
+    their batch axis and ``page_size`` at their time axis; slot-resident
+    leaves (``time_axes`` == -1) hold ``n_slots`` entries at their batch
+    axis.  ``page_tables``: (S, P) int32 page ids, padded with the
+    sentinel ``n_pages`` past each slot's allocation.  ``positions``:
+    (S,) absolute write position per slot.
+
+    Per slot (vmapped): gather its page list (sentinels clip to page 0 —
+    garbage that ``kv_len`` masking never exposes), reassemble a
+    contiguous batch-1 view of length ``P * page_size``, run the ordinary
+    ``decode_step``, and split the view back into pages.  Outside the
+    vmap, each leaf's updated pages scatter into the pool in one
+    ``mode="drop"`` write (sentinel ids fall out), so the whole step stays
+    one jit-compiled call.
+
+    ``scales``: with quantized pages, a tuple of (n_pages,) fp32 per-page
+    scale arrays aligned with the pageable leaves in flatten order
+    (``view_dtypes`` gives each leaf's compute dtype); dequant happens in
+    the gather and fresh scales are computed in the scatter.  Returns
+    (logits (S, V), new data, new scales).
+    """
+    data_leaves, treedef = jax.tree.flatten(data)
+    a_leaves = treedef.flatten_up_to(batch_axes)
+    t_leaves = treedef.flatten_up_to(time_axes)
+    quant = scales is not None
+    resident = tuple(x for x, t in zip(data_leaves, t_leaves) if t == -1)
+    res_axes = tuple(a for a, t in zip(a_leaves, t_leaves) if t == -1)
+
+    def one(tok, pt, res, pos):
+        res_it = iter(res)
+        scale_it = iter(scales or ())
+        dtype_it = iter(view_dtypes or ())
+        view_leaves = []
+        for x, a, t in zip(data_leaves, a_leaves, t_leaves):
+            if t == -1:
+                view_leaves.append(jnp.expand_dims(next(res_it), a))
+                continue
+            ids = jnp.clip(pt, 0, x.shape[a] - 1)
+            pages = jnp.take(x, ids, axis=a)
+            if quant:
+                pages = _dequant_pages(pages, jnp.take(next(scale_it), ids),
+                                       a, next(dtype_it))
+            view_leaves.append(pages_to_view(pages, a, t))
+        view = jax.tree.unflatten(treedef, view_leaves)
+        logits, new = decode_step(params, tok[None, :], cfg, view, pos, **kw)
+        out_pages, out_res = [], []
+        for x, a, t in zip(treedef.flatten_up_to(new), a_leaves, t_leaves):
+            if t == -1:
+                out_res.append(jnp.squeeze(x, a))
+            else:
+                out_pages.append(view_to_pages(x, a, t, page_size))
+        return logits[0], tuple(out_pages), tuple(out_res)
+
+    logits, pages_upd, res_upd = jax.vmap(
+        one, in_axes=(0, 0, res_axes, 0),
+        out_axes=(0, 0, res_axes))(tokens, page_tables, resident, positions)
+
+    flat_ids = page_tables.reshape(-1)
+    new_leaves = list(data_leaves)
+    new_scales = list(scales) if quant else None
+    pi = ri = 0
+    for i, (x, a, t) in enumerate(zip(data_leaves, a_leaves, t_leaves)):
+        if t == -1:
+            new_leaves[i] = res_upd[ri]
+            ri += 1
+            continue
+        u = jnp.moveaxis(pages_upd[pi], 0, a)       # slot axis next to pages
+        u = u.reshape(u.shape[:a] + (-1,) + u.shape[a + 2:])
+        if quant:
+            u, sc = _quant_pages(u, a)
+            new_scales[pi] = new_scales[pi].at[flat_ids].set(sc, mode="drop")
+        idx = (slice(None),) * a + (flat_ids,)
+        new_leaves[i] = x.at[idx].set(u.astype(x.dtype), mode="drop")
+        pi += 1
+    new_data = jax.tree.unflatten(treedef, new_leaves)
+    if quant:
+        return logits, new_data, tuple(new_scales)
+    return logits, new_data, None
 
 
 # --------------------------------------------------------------------------

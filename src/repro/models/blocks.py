@@ -68,6 +68,10 @@ def decoder_block_apply(params, x, cfg: ArchCfg, *, mode="train",
                                 backend=backend)
         new_cache = cache
     elif cfg.window and not cfg.mla:
+        if mode == "prefill_chunk":
+            raise ValueError(
+                "chunked prefill is not supported for sliding-window archs "
+                "(ring cache holds only the trailing window)")
         # sliding-window archs serve from a ring buffer of size `window`
         if mode == "decode":
             y, new_cache = _ring_decode(params["attn"], h, acfg, cache, pos,

@@ -233,6 +233,43 @@ def prefill(params, batch, cfg: ArchCfg, cache, *, backend=None,
     return logits[:, 0], new_cache
 
 
+def prefill_chunk(params, batch, cfg: ArchCfg, cache, pos, *, length=None,
+                  first_chunk: bool = True, backend=None):
+    """One decoder-prompt chunk at positions ``pos..pos+C-1``.
+
+    ``first_chunk`` (static) runs the encoder and writes the per-layer
+    cross-KV into the cache; later chunks reuse the cached cross-KV and
+    need no ``src_embeds``.  Self-attention uses the chunked causal path
+    against the cache; cross-attention always sees the full encoder
+    memory.  ``length`` as in ``transformer.prefill_chunk``.
+    """
+    memory = (encode(params, batch["src_embeds"], cfg, backend=backend)
+              if first_chunk else None)
+    x = embeddings.encode(params["embed"], batch["tokens"]).astype(_dt(cfg))
+
+    def body(x, xs):
+        p, c = xs
+        if first_chunk:
+            k, v = _cross_kv(p["cross_attn"], memory, cfg, backend)
+        else:
+            k, v = c["cross"]["k"], c["cross"]["v"]
+        x, self_c = _dec_block_apply(
+            p, x, memory, cfg, mode="prefill_chunk", cache=c["self"],
+            pos=pos, backend=backend, cross_kv=(k, v))
+        return x, {"self": self_c,
+                   "cross": {"k": k.astype(c["cross"]["k"].dtype),
+                             "v": v.astype(c["cross"]["v"].dtype)}}
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["dec_blocks"],
+                  {"self": cache["self"], "cross": cache["cross"]}),
+        unroll=cfg.scan_unroll)
+    idx = x.shape[1] - 1 if length is None else length - 1
+    x_last = jax.lax.dynamic_slice_in_dim(x, idx, 1, axis=1)
+    logits = _head(params, x_last, cfg)
+    return logits[:, 0], new_cache
+
+
 def decode_step(params, tokens, cfg: ArchCfg, cache, pos, *, backend=None):
     x = embeddings.encode(params["embed"], tokens).astype(_dt(cfg))
 

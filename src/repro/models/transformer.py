@@ -435,6 +435,28 @@ def prefill(params, batch, cfg: ArchCfg, cache, *, backend=None,
     return logits[:, 0], cache
 
 
+def prefill_chunk(params, batch, cfg: ArchCfg, cache, pos, *, length=None,
+                  backend=None):
+    """One chunk of a longer prompt: tokens at positions ``pos..pos+C-1``.
+
+    The chunk attends causally to everything already written into
+    ``cache`` (earlier chunks) plus itself, and appends its own KV at
+    ``pos``.  ``length`` (traced int <= C) marks the valid prefix of a
+    right-padded final chunk: logits are returned for chunk-local index
+    ``length - 1``; pad positions still write KV, but they land beyond the
+    prompt and every later mask (``kv_len = pos + 1``) excludes them
+    exactly.  Chaining chunks therefore reproduces one-shot ``prefill``.
+    Fixed chunk width => one compilation per chunk budget.
+    """
+    h = _embed_inputs(params, batch, cfg)
+    h, _, cache = _run_stacks(params, h, cfg, mode="prefill_chunk",
+                              caches=cache, pos=pos, backend=backend)
+    idx = h.shape[1] - 1 if length is None else length - 1
+    h_last = jax.lax.dynamic_slice_in_dim(h, idx, 1, axis=1)
+    logits = _head(params, h_last, cfg)
+    return logits[:, 0], cache
+
+
 def decode_step(params, tokens, cfg: ArchCfg, cache, pos, *, backend=None):
     """tokens: (B, 1); pos: traced int. Returns (logits (B, V), cache)."""
     h = embeddings.encode(params["embed"], tokens).astype(_dt(cfg))

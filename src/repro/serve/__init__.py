@@ -36,7 +36,7 @@ from repro.serve.frontend import (  # noqa: F401
     RequestResult,
 )
 from repro.serve.http import HttpFrontend, request_from_payload  # noqa: F401
-from repro.serve.kv_cache import SlotKVCache  # noqa: F401
+from repro.serve.kv_cache import PagedKVCache, SlotKVCache  # noqa: F401
 from repro.serve.metrics import (  # noqa: F401
     ClusterMetrics,
     LatencyHistogram,

@@ -176,6 +176,7 @@ class EngineRouter:
                  clock: Callable[[], float] = time.monotonic,
                  retry: RetryPolicy | None = None,
                  health: HealthConfig | None = None,
+                 trace_sample_rate: int | None = None,
                  sleep: Callable[[float], None] = time.sleep):
         replicas = list(replicas)
         if not replicas:
@@ -195,6 +196,10 @@ class EngineRouter:
         self.retry = retry
         self.health_cfg = health
         self.health = ClusterHealth(names, health) if health else None
+        # sampled tracing: every Nth ticket gets the full span tree on its
+        # replica (None => all); counters/events stay always-on.  Keyed on
+        # the ticket id, so a requeued ticket keeps its sampling decision.
+        self.trace_sample_rate = trace_sample_rate
         self.sleep = sleep
         self._by_name = {r.name: r for r in replicas}
         self.tickets: dict[int, ClusterRequest] = {}
@@ -317,12 +322,20 @@ class EngineRouter:
         ticket.replica = replica
         # the ticket id is the cluster-wide trace id: the same request
         # keeps it across requeues, so one trace follows it between
-        # replicas (each dispatch is a fresh local request id)
+        # replicas (each dispatch is a fresh local request id).  An
+        # unsampled ticket passes trace="" — the engine skips its spans
+        # but keeps every counter.
         ticket.local_id = replica.engine.submit(
             ticket.request, on_token=self._bridge(ticket),
-            trace=f"t{ticket.ticket_id}")
+            trace=self._trace_arg(ticket))
         obs.event("router.dispatch", trace=f"t{ticket.ticket_id}",
                   replica=replica.name, attempt=ticket.attempts)
+
+    def _trace_arg(self, ticket: ClusterRequest) -> str:
+        rate = self.trace_sample_rate
+        if rate is None or rate <= 1 or ticket.ticket_id % rate == 0:
+            return f"t{ticket.ticket_id}"
+        return ""
 
     def _bridge(self, ticket: ClusterRequest) -> Callable:
         """Per-dispatch engine callback: forwards the replica's token
@@ -408,7 +421,7 @@ class EngineRouter:
         for replica in self.replicas:
             if not replica.healthy:
                 continue
-            if not replica.engine.scheduler.has_work():
+            if not replica.engine.has_work():
                 if self.health is not None:   # idle check-in: not hung
                     self.health.beat(replica.name, self.clock())
                 continue
@@ -567,7 +580,7 @@ class EngineRouter:
         self.health.on_readmit(replica.name, self.clock())
 
     def has_work(self) -> bool:
-        return (any(r.healthy and r.engine.scheduler.has_work()
+        return (any(r.healthy and r.engine.has_work()
                     for r in self.replicas)
                 or any(not t.done for t in self._pending))
 
@@ -600,5 +613,8 @@ class EngineRouter:
                 "probing": 1.0 if (self.health is not None
                                    and self.health.is_probing(r.name))
                 else 0.0,
+                # pool gauges: slot occupancy always; page occupancy /
+                # fragmentation / free pages when the replica is paged
+                **r.engine.gauges(),
             } for r in self.replicas},
             counters=dict(self.counters))

@@ -38,7 +38,7 @@ from repro.configs.base import ArchCfg
 from repro.core import dispatch
 from repro.models import api
 from repro.sharding import annotate
-from repro.serve.kv_cache import SlotKVCache
+from repro.serve.kv_cache import PagedKVCache, SlotKVCache
 from repro.serve.metrics import ServeMetrics
 from repro.serve.scheduler import Request, RequestState, Scheduler
 
@@ -173,7 +173,7 @@ class Engine:
 
 @dataclasses.dataclass
 class PoolConfig:
-    """Slot pool sizing + prefill shaping.
+    """KV pool sizing + prefill shaping.
 
     ``n_slots`` bounds concurrent requests (decode cost is O(n_slots) every
     step, so size it to the target batch).  ``max_len`` bounds
@@ -182,11 +182,33 @@ class PoolConfig:
     share prefill compilations; only valid for architectures where pad
     tokens cannot perturb real ones (full causal attention, no capacity-
     routed MoE, no recurrence): plain dense decoders and enc-dec.
+
+    Paged pool knobs (see ``serve.kv_cache.PagedKVCache``):
+
+    ``page_size`` switches the engine to the paged KV cache — KV memory is
+    then budgeted in *pages*, not slot spans, and slots only hold page
+    tables.  ``n_pages`` is the page budget (default: enough for every
+    slot at full ``max_len``, i.e. no memory saving — size it below that
+    to overcommit; the engine preempts the newest request when the pool
+    runs dry).  On architectures where paging can't apply (sliding-window
+    ring buffers, recurrent state, VLM prefixes) the engine silently
+    falls back to the slotted pool.
+
+    ``prefill_chunk`` caps prefill work per scheduler step: prompts longer
+    than the chunk are split into ``prefill_chunk``-token chunks processed
+    across steps (one per step), so a long prompt never stalls running
+    decodes for more than one chunk's compute; shorter prompts share the
+    same per-step token budget.  ``kv_quant="int8"`` stores paged KV as
+    int8 with per-page scales (requires ``page_size``).
     """
     n_slots: int
     max_len: int
     src_len: int = 0
     prefill_bucket: int | None = None
+    page_size: int | None = None
+    n_pages: int | None = None
+    prefill_chunk: int | None = None
+    kv_quant: str | None = None
 
 
 def _supports_bucketing(cfg: ArchCfg) -> bool:
@@ -233,17 +255,44 @@ class ContinuousEngine:
                  mesh=None, axis_specs=None,
                  quant=None, decode_quant=None,
                  priority_fn=None, key=None,
+                 trace_sample_rate: int | None = None,
                  clock: Callable[[], float] = time.perf_counter):
         if pool.prefill_bucket is not None and not _supports_bucketing(cfg):
             raise ValueError(
                 f"prefill_bucket is not supported for block={cfg.block!r} "
                 f"(window={cfg.window}, n_patches={cfg.n_patches}): pad "
                 "tokens could perturb real ones")
+        if pool.prefill_chunk is not None and not api.supports_paging(cfg):
+            raise ValueError(
+                f"prefill_chunk is not supported for block={cfg.block!r} "
+                f"(window={cfg.window}, n_patches={cfg.n_patches}): chunk "
+                "attention needs position-indexed, length-masked KV")
+        if pool.prefill_chunk is not None and pool.prefill_bucket is not None:
+            raise ValueError("prefill_chunk and prefill_bucket are "
+                             "mutually exclusive")
+        if (pool.prefill_chunk is not None and pool.page_size
+                and pool.prefill_chunk % pool.page_size):
+            raise ValueError(
+                f"prefill_chunk ({pool.prefill_chunk}) must be a multiple "
+                f"of page_size ({pool.page_size}) so chunks stay "
+                "page-aligned")
+        if pool.kv_quant is not None and not pool.page_size:
+            raise ValueError("kv_quant requires page_size (paged pool)")
         self.cfg = cfg
         self.params = params
         self.pool_cfg = pool
-        self.pool = SlotKVCache(cfg, pool.n_slots, pool.max_len,
-                                src_len=pool.src_len)
+        # paged pool where the architecture allows it; slotted fallback
+        # (ring buffers / recurrent states have no pageable time axis)
+        self.paged = bool(pool.page_size) and api.supports_paging(cfg)
+        if self.paged:
+            self.pool = PagedKVCache(cfg, pool.n_slots, pool.max_len,
+                                     page_size=pool.page_size,
+                                     n_pages=pool.n_pages,
+                                     src_len=pool.src_len,
+                                     kv_quant=pool.kv_quant)
+        else:
+            self.pool = SlotKVCache(cfg, pool.n_slots, pool.max_len,
+                                    src_len=pool.src_len)
         self.scheduler = Scheduler(priority_fn=priority_fn)
         self.metrics = ServeMetrics()
         # every lifecycle stamp (submit/admit/prefill-end/first-token)
@@ -259,6 +308,14 @@ class ContinuousEngine:
         self._topk = np.zeros(pool.n_slots, np.int32)
         # request_id -> on_token callback for streaming consumers
         self._on_token: dict[int, Any] = {}
+        # chunked prefill in flight (at most one: head-of-line admission
+        # keeps staging memory bounded to a single batch-1 view)
+        self._staging: dict | None = None
+        # sampled per-request tracing: every Nth submitted request gets
+        # the full span tree; counters stay always-on for the rest
+        self.trace_sample_rate = trace_sample_rate
+        self._trace_count = 0
+        self._trace_ids: set[int] = set()
 
         # decode is weight-streaming-bound, so it gets its own quant tier
         # (int8 decode + full-precision prefill is the production mix)
@@ -278,14 +335,37 @@ class ContinuousEngine:
                 return api.prefill(p, batch, cfg, cache,
                                    logit_pos=logit_pos)
 
-        def _decode(p, tokens, cache, positions):
-            with dispatch.use(**tier(decode_quant)):
-                return api.decode_step_slots(p, tokens, cfg, cache,
-                                             positions,
-                                             batch_axes=batch_axes)
+        if self.paged:
+            time_axes = self.pool.time_axes
+            page_size = self.pool.page_size
+            view_dtypes = self.pool.view_dtypes
+
+            def _decode(p, tokens, data, scales, page_tables, positions):
+                with dispatch.use(**tier(decode_quant)):
+                    return api.decode_step_paged(
+                        p, tokens, cfg, data, page_tables, positions,
+                        batch_axes=batch_axes, time_axes=time_axes,
+                        page_size=page_size, scales=scales,
+                        view_dtypes=view_dtypes)
+        else:
+            def _decode(p, tokens, cache, positions):
+                with dispatch.use(**tier(decode_quant)):
+                    return api.decode_step_slots(p, tokens, cfg, cache,
+                                                 positions,
+                                                 batch_axes=batch_axes)
+
+        def _make_chunk(first):
+            def _chunk(p, batch, cache, pos):
+                with dispatch.use(**tier(quant)):
+                    return api.prefill_chunk(p, batch, cfg, cache, pos,
+                                             first_chunk=first)
+            return jax.jit(_chunk)
 
         self._prefill = jax.jit(_prefill)
         self._decode = jax.jit(_decode)
+        if pool.prefill_chunk:
+            self._chunk_first = _make_chunk(True)
+            self._chunk_rest = _make_chunk(False)
         self._sample = jax.jit(_sample_tokens)
         # greedy fast path: skips the sort/categorical work (and its
         # dispatch cost) when no active slot samples
@@ -308,6 +388,10 @@ class ContinuousEngine:
         ``trace`` is an opaque trace id stamped onto the request's spans
         and events (the router passes its ticket id, so one client request
         is followable across retries/replicas); defaults to ``req<id>``.
+        An explicit id forces the request to be span-sampled; ``""`` opts
+        it out; ``None`` defers to the engine's ``trace_sample_rate``
+        (every Nth submitted request gets the full span tree, counters
+        stay always-on for the rest; ``None`` rate samples everything).
         """
         n_prompt = len(request.prompt)
         if n_prompt < 1:
@@ -322,11 +406,22 @@ class ContinuousEngine:
             stops = ((self.cfg.eos_token,)
                      if self.cfg.eos_token is not None else ())
         self.metrics.requests_submitted += 1
+        self._trace_count += 1
+        if trace == "":
+            sampled, trace = False, None
+        elif trace is not None:
+            sampled = True
+        else:
+            rate = self.trace_sample_rate
+            sampled = (rate is None or rate <= 1
+                       or (self._trace_count - 1) % rate == 0)
         rid = self.scheduler.submit(request, stop_tokens=tuple(stops),
                                     step=self.metrics.steps,
                                     now=self._clock(), trace=trace)
         if trace is None:
             self.scheduler.waiting[-1].trace = f"req{rid}"
+        if sampled:
+            self._trace_ids.add(rid)
         if on_token is not None:
             self._on_token[rid] = on_token
         obs.event("engine.submit", request_id=rid,
@@ -376,12 +471,29 @@ class ContinuousEngine:
         span = (tr.span("prefill", request_id=state.request_id,
                         trace=state.trace, prompt_len=len(req.prompt),
                         slot=slot)
-                if tr is not None else obs.NULL_SPAN)
+                if tr is not None and state.request_id in self._trace_ids
+                else obs.NULL_SPAN)
         with span:
             logits, rcache = self._prefill(self.params, batch,
                                            self.pool.request_cache(),
                                            jnp.int32(logit_pos))
-            self.pool.insert(slot, rcache)
+            if self.paged:
+                n_valid = self._pos_off + len(req.prompt)
+                if not self.pool.insert(slot, rcache, n_valid):
+                    # step() pre-checks the page budget, so this only
+                    # trips on a logic error — fail loudly, not silently
+                    raise RuntimeError(
+                        f"page pool exhausted admitting request "
+                        f"{state.request_id}")
+            else:
+                self.pool.insert(slot, rcache)
+        return self._first_token(state, slot, logits)
+
+    def _first_token(self, state: RequestState, slot: int, logits):
+        """Sample the first token from prefill logits and activate the
+        slot.  Shared tail of one-shot admission (``_admit``) and chunked
+        prefill completion (``_staging_step``)."""
+        req = state.request
         # prefill dispatch is async; the sample below syncs, so the
         # first_decode segment includes waiting out the prefill tail
         state.prefill_end_time = self._clock()
@@ -397,13 +509,18 @@ class ContinuousEngine:
                 logits, jnp.full((1,), req.temperature, jnp.float32),
                 jnp.full((1,), req.top_k, jnp.int32), sub))[0])
         self.metrics.tokens_generated += 1
-        self.metrics.ttft_steps_sum += self.metrics.steps - state.submit_step
-        self.metrics.ttft_count += 1
+        # a preempted request re-admits with its tokens folded into the
+        # prompt: its TTFT was already recorded at first admission
+        first = state.first_token_time is None
+        if first:
+            self.metrics.ttft_steps_sum += (self.metrics.steps
+                                            - state.submit_step)
+            self.metrics.ttft_count += 1
         finished = self.scheduler.record_token(state, tok,
                                                self.metrics.steps,
                                                now=self._clock())
         # first token always lands at admission => wall-clock TTFT is known
-        if state.ttft_s is not None:
+        if first and state.ttft_s is not None:
             self.metrics.ttft_s_sum += state.ttft_s
             self.metrics.ttft_hist.observe(state.ttft_s)
         if finished:
@@ -421,8 +538,9 @@ class ContinuousEngine:
         self._release_slot(state.slot)
         self.metrics.requests_completed += 1
         tr = obs.current_tracer()
-        if tr is not None:
+        if tr is not None and state.request_id in self._trace_ids:
             self._trace_request(tr, state)
+        self._trace_ids.discard(state.request_id)
 
     def _trace_request(self, tracer, state: RequestState) -> None:
         """Emit the request's lifecycle as synthetic spans at eviction.
@@ -459,6 +577,117 @@ class ContinuousEngine:
         self._temps[slot] = 0.0
         self._topk[slot] = 0
 
+    # ---------------- chunked prefill / preemption ----------------
+
+    def _start_staging(self, state: RequestState, slot: int) -> None:
+        """Begin a chunked prefill: the prompt is longer than the per-step
+        prefill budget, so its chunks run one per ``step()`` against a
+        private batch-1 cache view; the finished view is inserted into the
+        pool in one scatter.  At most one request stages at a time
+        (head-of-line admission bounds staging memory to one view)."""
+        state.admit_time = self._clock()
+        self._staging = {"state": state, "slot": slot,
+                         "cache": self.pool.request_cache(),
+                         "pos": 0, "first": True,
+                         "logits": None, "ready": False}
+        obs.event("engine.prefill_chunk_start", request_id=state.request_id,
+                  trace=state.trace, prompt_len=len(state.request.prompt),
+                  chunk=self.pool_cfg.prefill_chunk)
+
+    def _staging_step(self):
+        """Advance the in-flight chunked prefill by one chunk (or retry a
+        page-starved pool insert).  Returns ``(prefill tokens consumed,
+        event or None)`` — the event fires on the chunk that completes the
+        prompt *and* lands in the pool."""
+        st = self._staging
+        state, slot = st["state"], st["slot"]
+        prompt = state.request.prompt
+        consumed = 0
+        if not st["ready"]:
+            pos = st["pos"]
+            width = min(self.pool_cfg.prefill_chunk, len(prompt) - pos)
+            batch = {"tokens": jnp.asarray(
+                np.asarray(prompt[pos:pos + width], np.int32)[None])}
+            if api.is_encdec(self.cfg) and st["first"]:
+                src = _as_batch1(state.request.src_embeds, "src_embeds")
+                if src.shape[1] != self.pool_cfg.src_len:
+                    raise ValueError(
+                        f"src_embeds length {src.shape[1]} != pool "
+                        f"src_len {self.pool_cfg.src_len}")
+                batch["src_embeds"] = src
+            chunk_fn = self._chunk_first if st["first"] else self._chunk_rest
+            tr = obs.current_tracer()
+            span = (tr.span("prefill.chunk", request_id=state.request_id,
+                            trace=state.trace, pos=pos, width=width,
+                            slot=slot)
+                    if tr is not None
+                    and state.request_id in self._trace_ids
+                    else obs.NULL_SPAN)
+            with span:
+                logits, st["cache"] = chunk_fn(self.params, batch,
+                                               st["cache"], jnp.int32(pos))
+            st["first"] = False
+            st["pos"] = pos + width
+            self.metrics.prefill_chunks += 1
+            consumed = width
+            if st["pos"] < len(prompt):
+                return consumed, None
+            st["ready"] = True
+            st["logits"] = logits
+        # prompt fully prefilled: move the view into the pool (page-
+        # starved inserts return False and are retried next step)
+        n_valid = self._pos_off + len(prompt)
+        if self.paged:
+            if not self.pool.insert(slot, st["cache"], n_valid):
+                return consumed, None
+        else:
+            self.pool.insert(slot, st["cache"])
+        logits = st["logits"]
+        self._staging = None
+        return consumed, self._first_token(state, slot, logits)
+
+    def _preempt(self, state: RequestState) -> None:
+        """Evict a running request to reclaim its pages: its generated
+        tokens fold into the prompt and it requeues first-in-line, so a
+        greedy re-admission prefill recomputes the same KV and continues
+        with the correct next token — nothing is emitted twice."""
+        slot = state.slot
+        obs.event("engine.preempt", request_id=state.request_id,
+                  trace=state.trace, generated=len(state.generated))
+        self.scheduler.preempt(state)
+        self._release_slot(slot)
+        self.metrics.preemptions += 1
+
+    def _ensure_pages(self) -> None:
+        """Paged pools only: guarantee every running slot owns the page
+        its next decode write lands in, preempting the newest admissions
+        while the free list is dry (newest-first keeps FCFS fairness and
+        minimizes recompute)."""
+        for slot in sorted(self.scheduler.running):
+            state = self.scheduler.running.get(slot)
+            if state is None:
+                continue   # preempted earlier in this pass
+            while not self.pool.ensure(slot, int(self.pool.positions[slot])):
+                victim = max(self.scheduler.running.values(),
+                             key=lambda s: (s.admit_step, s.request_id))
+                self._preempt(victim)
+                if victim is state:
+                    break
+
+    def gauges(self) -> dict[str, float]:
+        """Point-in-time pool gauges (slot occupancy; page stats when
+        paged) for metrics exporters."""
+        g = {"kv_occupancy": self.pool.occupancy}
+        if self.paged:
+            g["kv_page_occupancy"] = self.pool.page_occupancy
+            g["kv_page_fragmentation"] = self.pool.fragmentation
+            g["kv_free_pages"] = float(self.pool.n_free_pages)
+        return g
+
+    def has_work(self) -> bool:
+        """Whether any request is waiting, staging, or running."""
+        return self._staging is not None or self.scheduler.has_work()
+
     def cancel(self, request_id: int) -> bool:
         """Cancel a waiting or running request mid-flight.
 
@@ -469,12 +698,23 @@ class ContinuousEngine:
         generated token.  Returns False when the id is unknown or already
         finished.
         """
+        if (self._staging is not None
+                and self._staging["state"].request_id == request_id):
+            st, self._staging = self._staging, None
+            self.scheduler._finish(st["state"], "cancelled",
+                                   self.metrics.steps)
+            self._release_slot(st["slot"])
+            self._on_token.pop(request_id, None)
+            self._trace_ids.discard(request_id)
+            self.metrics.requests_cancelled += 1
+            return True
         state = self.scheduler.cancel(request_id, step=self.metrics.steps)
         if state is None:
             return False
         if state.slot is not None:
             self._release_slot(state.slot)
         self._on_token.pop(request_id, None)
+        self._trace_ids.discard(request_id)
         self.metrics.requests_cancelled += 1
         return True
 
@@ -494,8 +734,45 @@ class ContinuousEngine:
                                            depth)
 
         events = []
+        # per-step prefill token budget (prefill_chunk): the in-flight
+        # chunked prefill advances first, then one-shot admissions share
+        # whatever is left — decodes never stall more than one chunk
+        budget = self.pool_cfg.prefill_chunk
+        spent = 0
+        if self._staging is not None:
+            consumed, event = self._staging_step()
+            spent += consumed
+            if event is not None:
+                events.append(self._emit(*event))
         while self.pool.n_free and self.scheduler.waiting:
+            if budget is not None and spent >= budget:
+                break
             state = self.scheduler.next_waiting()
+            n_prompt = len(state.request.prompt)
+            if budget is not None and n_prompt > budget:
+                # prompt longer than a whole step's budget: chunk it.
+                # Staging starts only on a step with no prefill work yet,
+                # so every chunk gets the full (page-aligned) budget.
+                if self._staging is not None or spent:
+                    self.scheduler.requeue(state)
+                    break
+                slot = self.pool.alloc()
+                self._start_staging(state, slot)
+                consumed, event = self._staging_step()
+                spent += consumed
+                if event is not None:
+                    events.append(self._emit(*event))
+                break
+            if budget is not None and spent + n_prompt > budget:
+                self.scheduler.requeue(state)
+                break
+            if (self.paged and -(-(self._pos_off + n_prompt)
+                                 // self.pool.page_size)
+                    > self.pool.n_free_pages):
+                # not enough pages for the prompt: hold admission (decode
+                # progress frees pages as running requests finish)
+                self.scheduler.requeue(state)
+                break
             slot = self.pool.alloc()
             try:
                 event = self._admit(state, slot)
@@ -508,7 +785,10 @@ class ContinuousEngine:
                 self.scheduler.requeue(state)
                 raise
             events.append(self._emit(*event))
+            spent += n_prompt
 
+        if self.paged:
+            self._ensure_pages()
         active = sorted(self.scheduler.running.items())
         if active:
             tr = obs.current_tracer()
@@ -516,9 +796,16 @@ class ContinuousEngine:
                      if tr is not None else obs.NULL_SPAN)
             td0 = self._clock()
             with dspan:
-                logits, self.pool.cache = self._decode(
-                    self.params, jnp.asarray(self._tokens)[:, None],
-                    self.pool.cache, jnp.asarray(self.pool.positions))
+                if self.paged:
+                    logits, self.pool.data, self.pool.scales = self._decode(
+                        self.params, jnp.asarray(self._tokens)[:, None],
+                        self.pool.data, self.pool.scales,
+                        jnp.asarray(self.pool.page_tables),
+                        jnp.asarray(self.pool.positions))
+                else:
+                    logits, self.pool.cache = self._decode(
+                        self.params, jnp.asarray(self._tokens)[:, None],
+                        self.pool.cache, jnp.asarray(self.pool.positions))
                 if not np.any(self._temps > 0):
                     toks = np.asarray(self._greedy(logits))
                 else:
@@ -559,7 +846,7 @@ class ContinuousEngine:
         if key is not None:
             self._key = key
         ids = [self.submit(r) for r in requests]
-        while self.scheduler.has_work():
+        while self.has_work():
             self.step()
         return {rid: list(self.scheduler.finished[rid].generated)
                 for rid in ids}

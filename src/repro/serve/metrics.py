@@ -117,6 +117,10 @@ class LatencyHistogram:
 class ServeMetrics:
     steps: int = 0
     prefills: int = 0
+    # chunked prefill: individual prompt chunks processed, and running
+    # requests preempted to reclaim KV pages (paged pool under pressure)
+    prefill_chunks: int = 0
+    preemptions: int = 0
     decode_steps: int = 0
     requests_submitted: int = 0
     requests_completed: int = 0
@@ -196,6 +200,12 @@ _PROM_SPEC = (
      lambda m: m.steps),
     ("prefills_total", "counter", "Per-request prefills run.",
      lambda m: m.prefills),
+    ("prefill_chunks_total", "counter",
+     "Chunked-prefill prompt chunks processed.",
+     lambda m: m.prefill_chunks),
+    ("preemptions_total", "counter",
+     "Running requests preempted to reclaim KV pages.",
+     lambda m: m.preemptions),
     ("decode_steps_total", "counter", "Batched decode steps run.",
      lambda m: m.decode_steps),
     ("requests_submitted_total", "counter", "Requests submitted.",
@@ -260,6 +270,13 @@ _GAUGE_HELP = {
     "slots_free": "Free KV-cache slots on this replica.",
     "healthy": "1 when the replica is serving traffic, 0 quarantined.",
     "probing": "1 while the quarantined replica is under health probes.",
+    "kv_occupancy": "Occupied fraction of the replica's KV slots.",
+    "kv_page_occupancy":
+        "Allocated fraction of the replica's KV page pool.",
+    "kv_page_fragmentation":
+        "Allocated-but-dead KV fraction (partially filled trailing "
+        "pages).",
+    "kv_free_pages": "Free KV pages on this replica.",
 }
 _COUNTER_HELP = {
     "requests_rejected": "Requests rejected at a full backlog.",

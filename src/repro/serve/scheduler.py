@@ -156,6 +156,26 @@ class Scheduler:
         state.prefill_end_time = None
         self.waiting.appendleft(state)
 
+    def preempt(self, state: RequestState) -> None:
+        """Kick a *running* state back to the head of the queue (the
+        engine reclaims its KV pages).  Generated tokens are folded into
+        the prompt, so the re-admission prefill recomputes the same KV and
+        the next sampled token continues the sequence; ``state.generated``
+        keeps the emitted tokens, so ``max_tokens`` still counts the total
+        and nothing is emitted twice.  TTFT stamps survive — preemption
+        does not reset a request's first token."""
+        state.request = dataclasses.replace(
+            state.request,
+            prompt=tuple(state.request.prompt) + tuple(state.generated))
+        if state.slot is not None:
+            self.running.pop(state.slot, None)
+        state.status = WAITING
+        state.slot = None
+        state.admit_step = None
+        state.admit_time = None
+        state.prefill_end_time = None
+        self.waiting.appendleft(state)
+
     def start(self, state: RequestState, slot: int, step: int) -> None:
         state.status = RUNNING
         state.slot = slot

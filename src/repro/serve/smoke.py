@@ -29,6 +29,17 @@ token-for-token identical to a fault-free reference run.
 recorded, that every request's TTFT breakdown (queue/prefill/first
 decode) sums exactly to its wall-clock TTFT, and that the exported
 Chrome trace JSON round-trips ``obs.chrome.validate``.
+
+``python -m repro.serve.smoke --paged`` serves a mixed-length workload
+through the paged KV pool (2x-overcommitted page budget + chunked
+prefill) and through the slotted pool, asserting token-for-token greedy
+parity, full completion, and a drained page allocator (no leaks).
+
+``python -m repro.serve.smoke --chaos-soak`` is the long-haul variant of
+``--chaos``: a seeded random transient-fault *rate* on every injector
+site of two of three replicas, a 3x-length mixed workload on paged
+pools, and SLO asserts — every request terminal, availability >= 95%,
+and every completed stream token-identical to a fault-free reference.
 """
 from __future__ import annotations
 
@@ -238,6 +249,158 @@ def _chaos_smoke(args) -> None:
                          "loop")
 
 
+def _paged_smoke(args) -> None:
+    import jax
+    import numpy as np
+
+    from repro import configs
+    from repro.models import api
+    from repro.serve import ContinuousEngine, PoolConfig, Request
+
+    cfg = configs.get(args.arch).reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    # mixed prompt lengths, several past the chunk size so chunked
+    # prefill runs, plus a 2x-overcommitted page budget so the allocator
+    # churns (and may preempt) while parity must still hold
+    lens = [3 + (7 * i) % (args.max_len - 12) for i in range(args.requests)]
+    prompts = [rng.integers(0, cfg.vocab, n).tolist() for n in lens]
+    reqs = lambda: [Request(prompt=p, max_tokens=2 + i % 4,  # noqa: E731
+                            stop_tokens=())
+                    for i, p in enumerate(prompts)]
+
+    slotted = ContinuousEngine(
+        cfg, params, PoolConfig(n_slots=args.n_slots, max_len=args.max_len),
+        interpret=True)
+    reference = slotted.serve(reqs())
+
+    page_size = 8
+    pages_per_slot = -(-args.max_len // page_size)
+    n_pages = max(pages_per_slot, args.n_slots * pages_per_slot // 2)
+    engine = ContinuousEngine(
+        cfg, params, PoolConfig(n_slots=args.n_slots, max_len=args.max_len,
+                                page_size=page_size, n_pages=n_pages,
+                                prefill_chunk=2 * page_size),
+        interpret=True)
+    if not engine.paged:
+        raise SystemExit(f"arch {args.arch} did not take the paged pool")
+    out = engine.serve(reqs())
+
+    completed = sum(1 for toks in out.values() if toks)
+    parity = sum(1 for a, b in zip(sorted(out), sorted(reference))
+                 if out[a] == reference[b])
+    pool = engine.pool
+    leak_ok = (pool.page_alloc_count == pool.page_free_count
+               and pool.n_free_pages == pool.n_pages
+               and pool.n_free == pool.n_slots)
+    print(f"paged-smoke arch={args.arch} "
+          f"completed={completed}/{len(prompts)} "
+          f"parity={parity}/{len(prompts)} "
+          f"page_size={page_size} pages={n_pages} "
+          f"chunks={engine.metrics.prefill_chunks} "
+          f"preemptions={engine.metrics.preemptions} "
+          f"page_occupancy={pool.page_occupancy:.2f} "
+          f"fragmentation={pool.fragmentation:.2f} "
+          f"leak={'ok' if leak_ok else 'LEAK'}")
+    if completed != len(prompts):
+        raise SystemExit(f"only {completed}/{len(prompts)} completed")
+    if parity != len(prompts):
+        bad = [int(a) for a, b in zip(sorted(out), sorted(reference))
+               if out[a] != reference[b]]
+        raise SystemExit(f"paged tokens diverged from slotted at {bad}")
+    if not leak_ok:
+        raise SystemExit(
+            f"page leak after drain: alloc={pool.page_alloc_count} "
+            f"free={pool.page_free_count} "
+            f"free_pages={pool.n_free_pages}/{pool.n_pages}")
+
+
+def _chaos_soak_smoke(args) -> None:
+    import jax
+    import numpy as np
+
+    from repro import configs
+    from repro.models import api
+    from repro.serve import (ContinuousEngine, EngineReplica, EngineRouter,
+                             FaultClock, FaultInjector, HealthConfig,
+                             PoolConfig, Request, RetryPolicy)
+
+    cfg = configs.get(args.arch).reduced()
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    page_size = 8
+    pool = lambda: PoolConfig(n_slots=args.n_slots,  # noqa: E731
+                              max_len=args.max_len, page_size=page_size,
+                              prefill_chunk=2 * page_size)
+    make_engine = lambda: ContinuousEngine(cfg, params, pool())  # noqa: E731
+
+    rng = np.random.default_rng(0)
+    n = 3 * args.requests   # a longer mixed soak, not a quick smoke
+    lens = [3 + (7 * i) % (args.max_len - 12) for i in range(n)]
+    requests = [
+        Request(prompt=rng.integers(0, cfg.vocab, lens[i]).tolist(),
+                max_tokens=2 + i % 4, stop_tokens=())
+        for i in range(n)
+    ]
+    # greedy fault-free reference: the soaked cluster must stream the
+    # exact same tokens for every request that completes
+    reference = make_engine().serve(requests)
+    ref_tokens = [reference[i] for i in sorted(reference)]
+
+    clk = FaultClock()
+    # no scripted faults: a seeded random transient *rate* per site, the
+    # sustained low-grade failure weather a soak is about
+    injector = FaultInjector([], clock=clk, seed=0,
+                             rates={"step": 0.06, "prefill": 0.06,
+                                    "decode": 0.06})
+    replicas = [
+        EngineReplica("stable", make_engine(), factory=make_engine),
+        EngineReplica("soak-a", injector.instrument(make_engine(), "soak-a"),
+                      factory=make_engine),
+        EngineReplica("soak-b", injector.instrument(make_engine(), "soak-b"),
+                      factory=make_engine),
+    ]
+    router = EngineRouter(
+        replicas, clock=clk, sleep=clk.advance,
+        retry=RetryPolicy(max_retries=4, backoff_s=0.01, seed=0),
+        health=HealthConfig(probe_interval_s=1.0, probes_to_readmit=2,
+                            max_probes=32, watchdog_s=600.0))
+
+    out = router.serve(requests)
+    statuses = [router.tickets[tid].status for tid in sorted(out)]
+    terminal = sum(1 for s in statuses if s is not None)
+    completed = sum(1 for s in statuses if s == "completed")
+    chaos_tokens = [out[tid] for tid in sorted(out)]
+    parity = sum(1 for got, ref in zip(chaos_tokens, ref_tokens)
+                 if got == ref)
+    availability = completed / n
+    c = router.counters
+    print(f"chaos-soak arch={args.arch} replicas=3 requests={n} "
+          f"terminal={terminal}/{n} completed={completed}/{n} "
+          f"parity={parity}/{completed} "
+          f"availability={availability:.2f} "
+          f"faults={len(injector.fired)} retries={c['retries']} "
+          f"quarantined={c['replicas_quarantined']} "
+          f"readmitted={c['replicas_readmitted']} "
+          f"requeued={c['requests_requeued']}")
+    # SLOs: every request reaches a terminal status; availability (the
+    # completed fraction) holds 95% under the sustained fault rate; every
+    # completed stream is token-for-token the fault-free reference
+    if terminal != n:
+        raise SystemExit("SLO violation: a request never reached a "
+                         "terminal status")
+    if availability < 0.95:
+        raise SystemExit(f"SLO violation: availability "
+                         f"{availability:.2f} < 0.95")
+    if parity != completed:
+        bad = [i for i, (g, r) in enumerate(zip(chaos_tokens, ref_tokens))
+               if g != r and statuses[i] == "completed"]
+        raise SystemExit(f"soak streams diverged from the fault-free "
+                         f"reference at requests {bad}")
+    if len(injector.fired) < 3:
+        raise SystemExit(f"the soak barely soaked: only "
+                         f"{len(injector.fired)} faults fired")
+
+
 def _trace_smoke(args) -> None:
     import jax
     import numpy as np
@@ -319,6 +482,15 @@ def main(argv: Sequence[str] | None = None) -> None:
                          "with retry + health probes; asserts retries, "
                          "quarantine, re-admission, and token parity with "
                          "a fault-free run")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged-pool smoke: mixed-length workload on an "
+                         "overcommitted page budget with chunked prefill, "
+                         "token parity vs the slotted pool, allocator "
+                         "leak check")
+    ap.add_argument("--chaos-soak", action="store_true",
+                    help="long mixed workload under a sustained seeded "
+                         "transient-fault rate; asserts terminal-status "
+                         "and availability SLOs plus greedy parity")
     ap.add_argument("--trace", action="store_true",
                     help="tracing smoke: serve under an installed tracer, "
                          "assert prefill/decode/request spans and an "
@@ -340,12 +512,16 @@ def main(argv: Sequence[str] | None = None) -> None:
     if args.repeats is not None:
         os.environ[autotune.ENV_REPEATS] = str(args.repeats)
 
-    if args.chaos:
+    if args.chaos_soak:
+        _chaos_soak_smoke(args)
+    elif args.chaos:
         _chaos_smoke(args)
     elif args.frontend:
         _frontend_smoke(args)
     elif args.trace:
         _trace_smoke(args)
+    elif args.paged:
+        _paged_smoke(args)
     else:
         _continuous_smoke(args)
 
